@@ -1,0 +1,78 @@
+"""Shared harness for the paper-table benchmarks (Experiments 1-4).
+
+Job streams and the market follow Section 6.1 exactly; see
+``repro.core.workload`` / ``repro.core.market`` for the distributional
+details and DESIGN.md Section 4 for the two documented interpretation
+choices (price law, early starts).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import SpotMarket, generate_chain_jobs
+from repro.core.scheduler import Policy, run_jobs
+
+__all__ = ["Setup", "make_setup", "sweep_min", "argparser", "print_table"]
+
+
+class Setup:
+    def __init__(self, jobs, market, job_type: int, seed: int):
+        self.jobs = jobs
+        self.market = market
+        self.job_type = job_type
+        self.seed = seed
+
+    @property
+    def total_workload(self) -> float:
+        return float(sum(j.total_work for j in self.jobs))
+
+
+def make_setup(n_jobs: int, job_type: int, seed: int = 0) -> Setup:
+    jobs = generate_chain_jobs(n_jobs, job_type, seed=seed)
+    horizon = max(j.deadline for j in jobs) + 1.0
+    market = SpotMarket(horizon, seed=seed + 1000)
+    return Setup(jobs, market, job_type, seed)
+
+
+def sweep_min(setup: Setup, policies: list[Policy], **run_kwargs):
+    """min over a policy grid of the realized average unit cost."""
+    best = None
+    for pol in policies:
+        costs = run_jobs(setup.jobs, pol, setup.market, **run_kwargs)
+        a = costs.average_unit_cost()
+        if best is None or a < best[1]:
+            best = (pol, a, costs)
+    return best
+
+
+def argparser(desc: str) -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(description=desc)
+    p.add_argument("--jobs", type=int, default=1500,
+                   help="jobs per stream (paper: ~10000)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--types", type=int, nargs="+", default=[1, 2, 3, 4])
+    p.add_argument("--r", type=int, nargs="+", default=[300, 600, 900, 1200])
+    return p
+
+
+def print_table(title: str, header: list[str], rows: list[list[str]]):
+    print(f"\n== {title} ==")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+class Timer:
+    def __init__(self, label: str):
+        self.label = label
+
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        print(f"[{self.label}: {time.time() - self.t0:.1f}s]")

@@ -1,0 +1,59 @@
+"""Experiment 4 (paper Table 6) — TOLA online learning.
+
+rho_bar = 1 - alpha_bar(P) / alpha_bar(P'): realized average unit cost when
+TOLA drives the proposed grid vs when it drives the benchmark grid
+(Even windows + naive self-owned, bid-only policies). Job type fixed to 2
+(paper), r in {0, 300, 600, 900, 1200}.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Timer, argparser, make_setup, print_table
+from repro.core import (
+    benchmark_bid_policies,
+    run_tola,
+    selfowned_policies,
+    spot_od_policies,
+)
+
+
+def run(n_jobs: int, rs: list[int], seed: int = 0, job_type: int = 2) -> dict:
+    out = {}
+    s = make_setup(n_jobs, job_type, seed)
+    for r in rs:
+        with Timer(f"exp4 r={r}"):
+            grid = selfowned_policies() if r > 0 else spot_od_policies()
+            prop = run_tola(s.jobs, grid, s.market, r_total=r, seed=seed,
+                            early_start=True)
+            bench = run_tola(
+                s.jobs, benchmark_bid_policies(), s.market, r_total=r,
+                windows="even", selfowned="naive", early_start=False,
+                seed=seed)
+            out[r] = {
+                "alpha_tola": prop.average_unit_cost(),
+                "alpha_bench": bench.average_unit_cost(),
+                "rho_bar": 1 - prop.average_unit_cost() / bench.average_unit_cost(),
+                "best_fixed": prop.best_fixed_unit_cost,
+                "regret": prop.regret_per_job,
+                "top_weight": float(prop.weights.max()),
+            }
+    return out
+
+
+def main(argv=None):
+    p = argparser(__doc__)
+    p.set_defaults(r=[0, 300, 600, 900, 1200])
+    args = p.parse_args(argv)
+    res = run(args.jobs, args.r, args.seed)
+    rows = [[r, f"{v['alpha_tola']:.4f}", f"{v['alpha_bench']:.4f}",
+             f"{v['rho_bar']:.2%}", f"{v['best_fixed']:.4f}",
+             f"{v['regret']:.4f}", f"{v['top_weight']:.3f}"]
+            for r, v in sorted(res.items())]
+    print_table("Table 6 — TOLA online learning (job type 2)",
+                ["r", "alpha_tola", "alpha_bench", "rho_bar",
+                 "best_fixed", "regret", "top_weight"], rows)
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Roofline report: reads benchmarks/roofline_cache.json (written by
+launch/dryrun.py) and prints the per-(arch x shape x mesh) three-term
+roofline table with bottleneck classification and useful-flops ratios.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--variant base] [--csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+CACHE = os.path.join(os.path.dirname(__file__), "roofline_cache.json")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(path: str | None = None) -> list[dict]:
+    with open(path or CACHE) as f:
+        return json.load(f)
+
+
+def fmt_row(r: dict) -> list[str]:
+    if r["status"] == "skipped":
+        return [r["arch"], r["shape"], "2pod" if r["multi_pod"] else "1pod",
+                r.get("variant", "base"), "SKIP", "-", "-", "-", "-", "-", "-"]
+    if r["status"] != "ok":
+        return [r["arch"], r["shape"], "2pod" if r["multi_pod"] else "1pod",
+                r.get("variant", "base"), "FAIL", "-", "-", "-", "-", "-", "-"]
+    peak = r["bytes_per_device"]["peak"] / 2 ** 30
+    return [
+        r["arch"], r["shape"], "2pod" if r["multi_pod"] else "1pod",
+        r.get("variant", "base"),
+        f"{r['compute_s']:.4g}", f"{r['memory_s']:.4g}",
+        f"{r['collective_s']:.4g}", r["bottleneck"].replace("_s", ""),
+        f"{r['useful_flops_ratio']:.3f}",
+        f"{peak:.2f}", "yes" if r["fits_hbm"] else "NO",
+    ]
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--variant", default=None,
+                   help="filter to one variant (default: all)")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--all-meshes", action="store_true")
+    args = p.parse_args(argv)
+
+    try:
+        rows = load()
+    except FileNotFoundError:
+        print("roofline: no cache yet — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all` first")
+        return []
+    rows = [r for r in rows if args.all_meshes
+            or r["multi_pod"] == args.multi_pod]
+    if args.variant:
+        rows = [r for r in rows if r.get("variant", "base") == args.variant]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]),
+                             r["multi_pod"], r.get("variant", "base")))
+    header = ["arch", "shape", "mesh", "variant", "compute_s", "memory_s",
+              "collective_s", "bottleneck", "useful_ratio", "peak_GiB",
+              "fits"]
+    print(",".join(header))
+    for r in rows:
+        print(",".join(fmt_row(r)))
+    n_ok = sum(1 for r in rows if r["status"] == "ok")
+    n_skip = sum(1 for r in rows if r["status"] == "skipped")
+    n_fail = len(rows) - n_ok - n_skip
+    print(f"\n# {n_ok} ok, {n_skip} skipped-by-design, {n_fail} failed")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

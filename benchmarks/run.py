@@ -1,0 +1,70 @@
+"""Benchmark driver — one experiment per paper table + the roofline report.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--jobs N] [--skip ...]
+
+Sections:
+  exp1  Table 2  — spot+on-demand cost improvement (Greedy / Even)
+  exp2  Table 3  — overall improvement with self-owned instances
+  exp3  Tables 4+5 — policy (12) vs naive self-owned (+ utilization ratio)
+  exp4  Table 6  — TOLA online learning
+  roofline        — per-(arch x shape) roofline terms from the compiled
+                    dry-run (reads benchmarks/roofline_cache.json if the
+                    dry-run sweep has been run; see launch/dryrun.py)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--jobs", type=int, default=None,
+                   help="jobs per stream (default: 1500; --quick: 300)")
+    p.add_argument("--quick", action="store_true",
+                   help="small streams / reduced grids for CI-speed runs")
+    p.add_argument("--skip", nargs="*", default=[],
+                   choices=["exp1", "exp2", "exp3", "exp4", "roofline"])
+    p.add_argument("--only", nargs="*", default=None,
+                   choices=["exp1", "exp2", "exp3", "exp4", "roofline"])
+    args = p.parse_args(argv)
+
+    n_jobs = args.jobs or (300 if args.quick else 1500)
+    types = [1, 2] if args.quick else [1, 2, 3, 4]
+    rs = [300, 1200] if args.quick else [300, 600, 900, 1200]
+    rs4 = [0, 600] if args.quick else [0, 300, 600, 900, 1200]
+
+    def want(name: str) -> bool:
+        if args.only is not None:
+            return name in args.only
+        return name not in args.skip
+
+    t0 = time.time()
+    if want("exp1"):
+        from benchmarks import exp1_spot_ondemand
+        exp1_spot_ondemand.main(["--jobs", str(n_jobs),
+                                 "--types", *map(str, types)])
+    if want("exp2"):
+        from benchmarks import exp2_self_owned
+        exp2_self_owned.main(["--jobs", str(n_jobs),
+                              "--types", *map(str, types),
+                              "--r", *map(str, rs)])
+    if want("exp3"):
+        from benchmarks import exp3_policy12
+        exp3_policy12.main(["--jobs", str(n_jobs),
+                            "--types", *map(str, types),
+                            "--r", *map(str, rs)])
+    if want("exp4"):
+        from benchmarks import exp4_online_learning
+        exp4_online_learning.main(["--jobs", str(n_jobs),
+                                   "--r", *map(str, rs4)])
+    if want("roofline"):
+        from benchmarks import roofline
+        roofline.main([])
+    print(f"\n[benchmarks total: {time.time() - t0:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""End-to-end training driver.
+
+Default: a ~100M-parameter llama-style model for a few hundred steps on the
+available devices, with checkpoints + deterministic data. On this CPU
+container prefer the quick demo:
+
+    PYTHONPATH=src python examples/train_lm.py --quick        # ~2 min
+    PYTHONPATH=src python examples/train_lm.py                # ~100M params
+    PYTHONPATH=src python examples/train_lm.py --elastic      # preempt+resume
+"""
+
+import argparse
+
+from repro.launch.train import train_loop
+from repro.models.config import ModelConfig
+
+
+def model_100m() -> ModelConfig:
+    """~100M params: 12L, d=768, llama-style (GQA + SwiGLU + rotary)."""
+    return ModelConfig(
+        name="lm-100m", kind="decoder", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=2048, vocab=32000)
+
+
+def model_quick() -> ModelConfig:
+    return ModelConfig(
+        name="lm-quick", kind="decoder", n_layers=4, d_model=256,
+        n_heads=8, n_kv_heads=2, d_ff=688, vocab=4096)
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--elastic", action="store_true")
+    p.add_argument("--steps", type=int, default=None)
+    p.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = p.parse_args()
+
+    cfg = model_quick() if args.quick else model_100m()
+    steps = args.steps or (60 if args.quick else 300)
+    batch, seq = (8, 128) if args.quick else (16, 512)
+    print(f"[example] {cfg.name}: {cfg.params_dense/1e6:.0f}M params, "
+          f"{steps} steps, batch {batch} x seq {seq}")
+    if args.elastic:
+        r = train_loop(cfg, steps, args.ckpt_dir, batch, seq,
+                       preempt_at=steps // 2, ckpt_every=10)
+        print(f"[example] preempted at {r['step']}; restarting (elastic)")
+        r = train_loop(cfg, steps, args.ckpt_dir, batch, seq, resume=True,
+                       ckpt_every=10)
+    else:
+        r = train_loop(cfg, steps, args.ckpt_dir, batch, seq, ckpt_every=50)
+    print(f"[example] {r['status']} @ step {r['step']}, "
+          f"loss {r['losses'][0]:.3f} -> {r['losses'][-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+from repro.configs.registry import (
+    ARCH_NAMES,
+    SHAPES,
+    ShapeSpec,
+    get_config,
+    input_specs,
+    smoke_config,
+    supports,
+)
+
+__all__ = ["ARCH_NAMES", "SHAPES", "ShapeSpec", "get_config", "input_specs",
+           "smoke_config", "supports"]

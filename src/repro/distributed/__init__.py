@@ -1,0 +1,26 @@
+"""Distribution substrate: logical-axis sharding rules, distributed loss,
+gradient compression, and collective helpers (GSPMD/pjit based)."""
+
+from repro.distributed.compression import compressed_psum_tree, quantize_ef
+from repro.distributed.pipeline import bubble_fraction, pipeline_apply
+from repro.distributed.sharding import (
+    ShardingRules,
+    DEFAULT_RULES,
+    logical_to_spec,
+    param_specs,
+    constrain,
+)
+from repro.distributed.xent import cross_entropy
+
+__all__ = [
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "logical_to_spec",
+    "param_specs",
+    "constrain",
+    "cross_entropy",
+    "pipeline_apply",
+    "bubble_fraction",
+    "compressed_psum_tree",
+    "quantize_ef",
+]

@@ -1,0 +1,79 @@
+"""Pipeline parallelism: GPipe-style microbatched pipelining over a
+``stage`` mesh axis with `shard_map` + `ppermute`.
+
+Each device (group) holds one stage's parameters. Time is unrolled into
+``n_micro + n_stages - 1`` ticks; at every tick each stage processes the
+activation it holds and `ppermute`s the result to its successor, while
+stage 0 injects the next microbatch — the standard fill/steady/drain
+schedule. Bubble fraction = (S-1)/(M+S-1), so callers pick M >> S.
+
+This composes with the GSPMD axes: the stage axis is `shard_map`-manual,
+everything else (data/model) stays auto — the same partial-auto pattern as
+the grouped MoE dispatch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["pipeline_apply", "bubble_fraction"]
+
+
+def bubble_fraction(n_micro: int, n_stages: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def pipeline_apply(stage_fn, stage_params, x, n_stages: int,
+                   axis: str = "stage"):
+    """Run ``x`` through ``n_stages`` pipeline stages.
+
+    stage_fn:      (params_one_stage, activation (B_micro, ...)) -> same shape
+    stage_params:  pytree whose leaves have a leading ``n_stages`` dim
+    x:             (n_micro, B_micro, ...) microbatched activations
+    Must be called under jax.set_mesh of a mesh that has ``axis``.
+
+    Returns (n_micro, B_micro, ...) outputs of the final stage.
+    """
+    n_micro = x.shape[0]
+    ticks = n_micro + n_stages - 1
+
+    def inner(params_local, x_local):
+        # params_local leaves: (1, ...) — this stage's slice.
+        p_one = jax.tree.map(lambda a: a[0], params_local)
+        idx = jax.lax.axis_index(axis)
+        state = jnp.zeros_like(x_local[0])
+        outs = jnp.zeros_like(x_local)
+
+        def tick(carry, t):
+            state, outs = carry
+            inject = x_local[jnp.clip(t, 0, n_micro - 1)]
+            cur = jnp.where(idx == 0,
+                            jnp.where(t < n_micro, inject, state), state)
+            y = stage_fn(p_one, cur)
+            # Last stage emits microbatch t - (n_stages - 1).
+            out_t = t - (n_stages - 1)
+            emit = (idx == n_stages - 1) & (out_t >= 0)
+            outs = jax.lax.cond(
+                emit,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.maximum(out_t, 0), 0),
+                lambda o: o, outs)
+            # forward the activation ring: stage i -> i+1
+            nxt = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (nxt, outs), None
+
+        (_, outs), _ = jax.lax.scan(tick, (state, outs), jnp.arange(ticks))
+        # Only the last stage holds real outputs; replicate via a masked
+        # psum (ppermute cannot one-to-many broadcast).
+        outs = jnp.where(idx == n_stages - 1, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(outs, axis)
+
+    return jax.shard_map(
+        inner,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        axis_names={axis}, check_vma=False,
+    )(stage_params, x)

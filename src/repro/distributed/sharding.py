@@ -1,0 +1,144 @@
+"""Logical-axis sharding: one rule table maps model-semantic axis names to
+mesh axes; every parameter and activation is annotated through it.
+
+Logical axes used across the zoo:
+
+  batch      — global batch                      -> ("pod", "data") [+ "model" for decode]
+  seq        — sequence (context-parallel)       -> None (or "model" for long prefill)
+  d_model    — residual width                    -> None
+  heads      — attention query heads             -> "model"
+  kv_heads   — attention kv heads                -> "model" (or None when kv < mesh)
+  d_ff       — MLP hidden                        -> "model"
+  vocab      — embedding/logits vocabulary       -> "model"
+  experts    — MoE expert dimension              -> "model" (expert parallelism)
+  fsdp       — parameter shard axis (ZeRO-3)     -> ("pod", "data")
+  layers     — scan-stacked layer dim            -> None
+  conv, d_state, d_head, groups                  -> None
+
+The rules are a plain dict so perf variants (see EXPERIMENTS.md §Perf) can
+override individual entries without touching model code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "logical_to_spec",
+    "param_specs",
+    "constrain",
+]
+
+Rules = dict[str, Any]
+
+# axis name -> mesh axis (str), tuple of mesh axes, or None (replicated)
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "decode_batch": ("pod", "data", "model"),
+    "seq": None,
+    "seq_shard": "model",       # sequence-parallel prefill variant
+    "d_model": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "fsdp": ("pod", "data"),
+    "layers": None,
+    "conv": None,
+    "d_state": None,
+    "d_head": None,
+    "groups": None,
+    "frames": None,
+    "patches": None,
+    # decode-time cache axes
+    "cache_batch": ("pod", "data"),
+    "cache_seq": "model",      # context-parallel KV cache
+    "ssm_p": "model",          # SSD head_dim (divides for both ssm archs)
+    "conv_ch": "model",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Rule table bound to a mesh; filters axes the mesh doesn't have."""
+
+    rules: tuple[tuple[str, Any], ...]
+    mesh_axes: tuple[str, ...]
+
+    @classmethod
+    def create(cls, mesh: Mesh | None, overrides: Rules | None = None):
+        rules = dict(DEFAULT_RULES)
+        if overrides:
+            rules.update(overrides)
+        axes = tuple(mesh.axis_names) if mesh is not None else ()
+        return cls(rules=tuple(rules.items()), mesh_axes=axes)
+
+    def _mesh_axis(self, logical: str | None):
+        if logical is None:
+            return None
+        rule = dict(self.rules).get(logical, None)
+        if rule is None:
+            return None
+        if isinstance(rule, str):
+            return rule if rule in self.mesh_axes else None
+        picked = tuple(a for a in rule if a in self.mesh_axes)
+        return picked if picked else None
+
+    def spec(self, *logical_axes: str | None) -> P:
+        """PartitionSpec for an array whose dims carry these logical names."""
+        used: set[str] = set()
+        out = []
+        for ax in logical_axes:
+            m = self._mesh_axis(ax)
+            # A mesh axis may appear at most once in a PartitionSpec.
+            if m is None:
+                out.append(None)
+                continue
+            ms = (m,) if isinstance(m, str) else m
+            ms = tuple(a for a in ms if a not in used)
+            used.update(ms)
+            if not ms:
+                out.append(None)
+            elif len(ms) == 1:
+                out.append(ms[0])
+            else:
+                out.append(ms)
+        return P(*out)
+
+
+def logical_to_spec(rules: ShardingRules, tree):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda axes: rules.spec(*axes),
+        tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x),
+    )
+
+
+def param_specs(axes_tree, rules: ShardingRules):
+    """PartitionSpec tree for a parameter pytree annotated with logical axes.
+
+    ``axes_tree`` mirrors the param tree; each leaf is a tuple of logical
+    axis names (length == ndim of the corresponding array).
+    """
+    return logical_to_spec(rules, axes_tree)
+
+
+def constrain(x, rules: ShardingRules | None, *logical_axes: str | None):
+    """with_sharding_constraint through the rule table (no-op off-mesh)."""
+    if rules is None or not rules.mesh_axes:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, rules.spec(*logical_axes))
+    except (ValueError, RuntimeError):
+        # Outside a mesh context (e.g. plain CPU tests) the constraint is
+        # meaningless — pass through.
+        return x

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers:
+
+  flash_attention — blockwise online-softmax attention (GQA, causal,
+                    sliding window + meta-token prefix)
+  ssd_scan        — Mamba-2 SSD chunked scan (grid-carried chunk state)
+  policy_cost     — the paper's TOLA scoring hot loop (batched closed-form
+                    task-cost evaluation over the market's cumulative arrays)
+
+Each kernel has a pure-jnp oracle in ref.py (structurally different
+algorithm) and a jit'd wrapper in ops.py; validated in interpret mode on CPU.
+"""
+
+from repro.kernels.ops import flash_attention, policy_cost_batch, ssd
+
+__all__ = ["flash_attention", "ssd", "policy_cost_batch"]

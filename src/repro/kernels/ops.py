@@ -1,0 +1,70 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret=None`` auto-detects: compiled kernels on TPU, interpret mode
+(Python-evaluated kernel bodies) elsewhere — which is how the CPU-only test
+environment validates the TPU kernels against the jnp oracles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.policy_cost import policy_cost as _policy_cost
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+__all__ = ["flash_attention", "ssd", "policy_cost_batch", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _auto(interpret):
+    return (not on_tpu()) if interpret is None else interpret
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "prefix", "block_q", "block_k", "interpret"))
+def _flash_jit(q, k, v, causal, window, prefix, block_q, block_k, interpret):
+    return flash_attention_fwd(
+        q, k, v, causal=causal, window=window, prefix=prefix,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    prefix: int = 0, block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q: (B, Sq, H, dh); k/v: (B, Sk, K, dh) -> (B, Sq, H, dh)."""
+    B, Sq, H, dh = q.shape
+    K = k.shape[2]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, k.shape[1], dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, v.shape[1], dh)
+    of = _flash_jit(qf, kf, vf, causal, window, prefix, block_q, block_k,
+                    _auto(interpret))
+    return of.reshape(B, H, Sq, dh).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_jit(x, dt, A, B, C, chunk, interpret):
+    return _ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+
+
+def ssd(x, dt, A, B, C, *, chunk: int = 128, interpret: bool | None = None):
+    """Chunked SSD scan. Shapes as in kernels/ssd_scan.py."""
+    return _ssd_jit(x, dt, A, B, C, chunk, _auto(interpret))
+
+
+def policy_cost_batch(A_cum, C_cum, start, end, z_t, d_eff, *,
+                      slot: float = 1.0 / 12.0, p_od: float = 1.0,
+                      interpret: bool | None = None):
+    """Batched closed-form task costs (the TOLA scoring hot loop)."""
+    return _policy_cost(
+        jnp.asarray(A_cum, jnp.float32), jnp.asarray(C_cum, jnp.float32),
+        jnp.asarray(start, jnp.float32), jnp.asarray(end, jnp.float32),
+        jnp.asarray(z_t, jnp.float32), jnp.asarray(d_eff, jnp.float32),
+        slot=slot, p_od=p_od, interpret=_auto(interpret))

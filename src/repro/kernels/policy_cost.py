@@ -1,0 +1,172 @@
+"""Pallas TPU kernel for the paper's evaluation hot loop: batched
+closed-form task-cost evaluation (Definition 3.2 over a realized market).
+
+TOLA (Alg. 4) scores every job under every policy of the grid — O(n_jobs x
+n_policies) independent closed-form task simulations, each a pair of
+monotone piecewise-linear inversions over the market's cumulative arrays
+(A = availability time, C = spot payment, H = t - A; see
+core/simulate.py). That inner evaluation is this kernel.
+
+TPU adaptation (vs the numpy searchsorted implementation):
+  * the cumulative arrays for one bid (~30k slots, f32) fit comfortably in
+    VMEM (~0.4 MB) and are loaded once per task block;
+  * searchsorted becomes a comparison-count reduction (monotone array:
+    index = #{k : cum[k] < target}) accumulated chunk-by-chunk with a
+    fori_loop — no data-dependent control flow;
+  * point gathers (cum[k0], cum[k0+1], ...) become one-hot matmuls against
+    the chunk — MXU work instead of serial gathers.
+
+Grid = (n_tasks / BT,); everything else is elementwise arithmetic on the
+(BT,) task registers. Oracle: kernels/ref.py::policy_cost_ref (vectorized
+jnp) and core/simulate.py (numpy, exact) — see tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["policy_cost"]
+
+_CHUNK = 2048
+
+
+def _kernel(A_ref, C_ref, H_ref, start_ref, end_ref, z_ref, d_ref,
+            sc_ref, oc_ref, sw_ref, fin_ref, *,
+            n_slots: int, n_pad: int, slot: float, p_od: float, BT: int):
+    start = start_ref[...]
+    end = end_ref[...]
+    z_t = z_ref[...]
+    d_eff = d_ref[...]
+
+    nch = n_pad // _CHUNK
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (BT, _CHUNK), 1)
+
+    def gathers_and_counts(idx_list, count_targets, value_refs):
+        """One pass over the slot arrays: gather value_refs[j][idx] for every
+        (idx, ref) pair and count {k: ref[k] < target} for every
+        (target, ref) pair."""
+        def body(c, carry):
+            g_acc, c_acc = carry
+            base = c * _CHUNK
+            chunks = [r[pl.dslice(base * 0 + base, _CHUNK)] for r in value_refs]
+            g_new = []
+            for (idx, ref_i), acc in zip(idx_list, g_acc):
+                oh = jnp.where(iota_c == (idx[:, None] - base), 1.0, 0.0)
+                g_new.append(acc + oh @ chunks[ref_i])
+            c_new = []
+            for (tgt, ref_i), acc in zip(count_targets, c_acc):
+                c_new.append(acc + jnp.sum(
+                    (chunks[ref_i][None, :] < tgt[:, None]).astype(jnp.int32),
+                    axis=1))
+            return g_new, c_new
+        g0 = [jnp.zeros((BT,), jnp.float32) for _ in idx_list]
+        c0 = [jnp.zeros((BT,), jnp.int32) for _ in count_targets]
+        return jax.lax.fori_loop(0, nch, body, (g0, c0))
+
+    refs = [A_ref, C_ref, H_ref]
+
+    # Pass 1: interpolated A0/C0 at `start` + the two inverse-query counts.
+    k0 = jnp.clip((start / slot).astype(jnp.int32), 0, n_slots - 1)
+    d_safe = jnp.where(d_eff > 0, d_eff, 1.0)
+    need = z_t / d_safe
+    # (we need A0 before computing targets — gather k0/k0+1 first)
+    (a_k0, a_k1, c_k0, c_k1), _ = gathers_and_counts(
+        [(k0, 0), (k0 + 1, 0), (k0, 1), (k0 + 1, 1)], [], refs)
+    frac = start - k0.astype(jnp.float32) * slot
+    A0 = a_k0 + (a_k1 - a_k0) / slot * frac
+    C0 = c_k0 + (c_k1 - c_k0) / slot * frac
+    H0 = start - A0
+
+    h_target = H0 + (end - start) - need
+    a_target = A0 + need
+    _, (cntH, cntA) = gathers_and_counts([], [(h_target, 2), (a_target, 0)],
+                                         refs)
+
+    # Pass 2: invert H and A at the counted indices.
+    iH = jnp.clip(cntH, 1, n_slots)
+    iA = jnp.clip(cntA, 1, n_slots)
+    (h_prev, a_prev), _ = gathers_and_counts([(iH - 1, 2), (iA - 1, 0)], [],
+                                             refs)
+    t_turn = (iH - 1).astype(jnp.float32) * slot + (h_target - h_prev)
+    t_turn = jnp.where(h_target <= H0 + 1e-15, start, t_turn)
+    t_turn = jnp.where(cntH > n_slots, jnp.inf, t_turn)
+    t_fin = (iA - 1).astype(jnp.float32) * slot + (a_target - a_prev)
+    t_fin = jnp.where(a_target <= 0.0, 0.0, t_fin)
+    t_fin = jnp.where(cntA > n_slots, jnp.inf, t_fin)
+
+    on_spot = t_fin <= t_turn
+    t_end = jnp.minimum(jnp.where(on_spot, t_fin, t_turn), end)
+
+    # Pass 3: A/C at t_end.
+    ke = jnp.clip((t_end / slot).astype(jnp.int32), 0, n_slots - 1)
+    (a_e0, a_e1, c_e0, c_e1), _ = gathers_and_counts(
+        [(ke, 0), (ke + 1, 0), (ke, 1), (ke + 1, 1)], [], refs)
+    frace = t_end - ke.astype(jnp.float32) * slot
+    A_end = a_e0 + (a_e1 - a_e0) / slot * frace
+    C_end = c_e0 + (c_e1 - c_e0) / slot * frace
+
+    active = z_t > 1e-15
+    spot_work = jnp.minimum(d_eff * jnp.maximum(A_end - A0, 0.0), z_t)
+    spot_cost = d_eff * jnp.maximum(C_end - C0, 0.0)
+    od_work = z_t - spot_work
+    zeros = jnp.zeros_like(z_t)
+    sc_ref[...] = jnp.where(active, spot_cost, zeros)
+    oc_ref[...] = jnp.where(active, p_od * od_work, zeros)
+    sw_ref[...] = jnp.where(active, spot_work, zeros)
+    fin_ref[...] = jnp.where(active, jnp.where(on_spot, t_fin, end), start)
+
+
+def policy_cost(A_cum, C_cum, start, end, z_t, d_eff, *,
+                slot: float = 1.0 / 12.0, p_od: float = 1.0,
+                block_tasks: int = 128, interpret: bool = False):
+    """Batched closed-form task costs under one bid's market arrays.
+
+    A_cum/C_cum: (n_slots+1,) f32 cumulative availability / payment;
+    start/end/z_t/d_eff: (T,) task windows and cloud workloads.
+    Returns dict(spot_cost, ondemand_cost, spot_work, finish) of (T,).
+    """
+    n_slots = A_cum.shape[0] - 1
+    T = start.shape[0]
+    BT = min(block_tasks, max(T, 8))
+    pt = (-T) % BT
+    if pt:
+        pad1 = lambda a: jnp.pad(a, (0, pt))
+        start, end, z_t, d_eff = map(pad1, (start, end, z_t, d_eff))
+    boundaries_last = n_slots * slot
+    H_cum = jnp.arange(n_slots + 1, dtype=jnp.float32) * slot - A_cum
+    n_pad = ((n_slots + 1 + _CHUNK - 1) // _CHUNK) * _CHUNK
+    padv = n_pad - (n_slots + 1)
+    big = jnp.float32(3.4e38)
+    A_p = jnp.pad(A_cum.astype(jnp.float32), (0, padv), constant_values=big)
+    C_p = jnp.pad(C_cum.astype(jnp.float32), (0, padv), constant_values=big)
+    H_p = jnp.pad(H_cum.astype(jnp.float32), (0, padv), constant_values=big)
+
+    kernel = functools.partial(
+        _kernel, n_slots=n_slots, n_pad=n_pad, slot=slot, p_od=p_od, BT=BT)
+    n_blocks = (T + pt) // BT
+    outs = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((n_pad,), lambda i: (0,)),
+            pl.BlockSpec((n_pad,), lambda i: (0,)),
+            pl.BlockSpec((n_pad,), lambda i: (0,)),
+            pl.BlockSpec((BT,), lambda i: (i,)),
+            pl.BlockSpec((BT,), lambda i: (i,)),
+            pl.BlockSpec((BT,), lambda i: (i,)),
+            pl.BlockSpec((BT,), lambda i: (i,)),
+        ],
+        out_specs=[pl.BlockSpec((BT,), lambda i: (i,)) for _ in range(4)],
+        out_shape=[jax.ShapeDtypeStruct((T + pt,), jnp.float32)
+                   for _ in range(4)],
+        interpret=interpret,
+    )(A_p, C_p, H_p, start.astype(jnp.float32), end.astype(jnp.float32),
+      z_t.astype(jnp.float32), d_eff.astype(jnp.float32))
+    sc, oc, sw, fin = [o[:T] for o in outs]
+    del boundaries_last
+    return {"spot_cost": sc, "ondemand_cost": oc, "spot_work": sw,
+            "finish": fin}

@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Deliberately naive implementations (materialized score matrix; sequential
+token-by-token SSD recurrence) — structurally different algorithms from the
+kernels, so agreement is meaningful.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["attention_ref", "ssd_ref", "policy_cost_ref"]
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  prefix: int = 0):
+    """q: (BH, Sq, dh), k/v: (BK, Sk, dh); naive softmax attention."""
+    BH, Sq, dh = q.shape
+    BK, Sk, _ = k.shape
+    g = BH // BK
+    k = jnp.repeat(k, g, axis=0)
+    v = jnp.repeat(v, g, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(dh)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    bad = jnp.zeros((Sq, Sk), bool)
+    if causal:
+        bad |= k_pos > q_pos
+    if window > 0:
+        oow = (q_pos - k_pos) >= window
+        if prefix > 0:
+            oow &= k_pos >= prefix
+        bad |= oow
+    s = jnp.where(bad[None], -1e30, s)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, init_state=None):
+    """Token-by-token SSD recurrence (the definition, not the chunked form).
+
+    x: (Bb, S, H, P); dt: (Bb, S, H); A: (H,); B/C: (Bb, S, G, N).
+    Returns (y, final_state) — y: (Bb, S, H, P), state: (Bb, H, P, N).
+    """
+    Bb, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)   # (Bb, S, H, N)
+    Ch = jnp.repeat(C, rep, axis=2)
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp
+        decay = jnp.exp(A[None, :] * dt_t)                 # (Bb, H)
+        upd = jnp.einsum("bhp,bhn->bhpn", x_t * dt_t[..., None], B_t)
+        state = state * decay[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", state, C_t)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    if init_state is None:
+        init_state = jnp.zeros((Bb, H, P, N), jnp.float32)
+    state, ys = jax.lax.scan(step, init_state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def policy_cost_ref(A_cum, C_cum, start, end, z_t, d_eff, p_od=1.0):
+    """Closed-form per-task spot/on-demand costs (mirrors
+    repro.core.simulate.simulate_tasks, jnp edition).
+
+    A_cum/C_cum: (n_slots+1,) cumulative availability / spot-payment arrays
+    on the slot grid (slot length = 1/12); boundaries are implicit
+    (k / 12). Returns dict of per-task arrays.
+    """
+    slot = 1.0 / 12.0
+    n = A_cum.shape[0] - 1
+    horizon = n * slot
+    boundaries = jnp.arange(n + 1) * slot
+    H_cum = boundaries - A_cum
+
+    def interp(cum, t):
+        t = jnp.clip(t, 0.0, horizon)
+        k = jnp.clip((t / slot).astype(jnp.int32), 0, n - 1)
+        frac = t - k * slot
+        slope = (cum[k + 1] - cum[k]) / slot
+        return cum[k] + slope * frac
+
+    def invert(cum, target):
+        k = jnp.searchsorted(cum, target, side="left")
+        k = jnp.clip(k, 1, n)
+        return jnp.where(target <= cum[0], boundaries[0],
+                         boundaries[k - 1] + (target - cum[k - 1]))
+
+    active = z_t > 1e-15
+    d_safe = jnp.where(d_eff > 0, d_eff, 1.0)
+    need = z_t / d_safe
+    A0 = jax.vmap(lambda t: interp(A_cum, t))(start)
+    C0 = jax.vmap(lambda t: interp(C_cum, t))(start)
+    H0 = start - A0
+    h_target = H0 + (end - start) - need
+    t_turn = jnp.where(h_target <= H0 + 1e-15, start,
+                       jax.vmap(lambda x: invert(H_cum, x))(h_target))
+    t_fin = jax.vmap(lambda x: invert(A_cum, x))(A0 + need)
+    on_spot = t_fin <= t_turn
+    t_end = jnp.minimum(jnp.where(on_spot, t_fin, t_turn), end)
+    spot_avail = jnp.maximum(jax.vmap(lambda t: interp(A_cum, t))(t_end) - A0, 0.0)
+    spot_work = jnp.minimum(d_eff * spot_avail, z_t)
+    spot_cost = d_eff * jnp.maximum(
+        jax.vmap(lambda t: interp(C_cum, t))(t_end) - C0, 0.0)
+    od_work = z_t - spot_work
+    zeros = jnp.zeros_like(z_t)
+    return {
+        "spot_cost": jnp.where(active, spot_cost, zeros),
+        "ondemand_cost": jnp.where(active, p_od * od_work, zeros),
+        "spot_work": jnp.where(active, spot_work, zeros),
+        "finish": jnp.where(active, jnp.where(on_spot, t_fin, end), start),
+    }

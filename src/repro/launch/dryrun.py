@@ -1,0 +1,263 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--variant v]
+
+Proves the distribution config is coherent without hardware: 512 placeholder
+host devices back the production meshes; inputs are ShapeDtypeStructs (no
+allocation); the compiled artifact yields memory_analysis() (fits-per-chip),
+cost_analysis() (FLOPs/bytes) and the HLO collective schedule — the three
+§Roofline terms. Results append to benchmarks/roofline_cache.json.
+"""
+
+# MUST be the very first lines — jax locks the device count on first init.
+import os
+
+_XLA_PREV = os.environ.get("XLA_FLAGS", "")
+os.environ["XLA_FLAGS"] = (
+    _XLA_PREV + " --xla_force_host_platform_device_count=512").strip()
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, input_specs, supports  # noqa: E402
+from repro.distributed.sharding import ShardingRules  # noqa: E402
+from repro.launch.hlo_analysis import analyze  # noqa: E402
+from repro.launch.mesh import HW, make_production_mesh  # noqa: E402
+from repro.launch import steps as step_lib  # noqa: E402
+from repro.launch.variants import VARIANTS  # noqa: E402
+from repro.models import build  # noqa: E402
+from repro.optim import AdamW  # noqa: E402
+
+CACHE_PATH = os.path.join(os.path.dirname(__file__),
+                          "../../../benchmarks/roofline_cache.json")
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+_SHAPE_RE = re.compile(r"\b((?:bf|f|s|u)\d+|pred)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the (SPMD-partitioned)
+    HLO. Per-op-kind breakdown for the §Roofline bottleneck analysis."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1).lower()
+        # operands are inside the call parens; result shape precedes " = ".
+        call = line[m.end():]
+        bytes_ = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(call))
+        out[kind] = out.get(kind, 0) + bytes_
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) useful-work estimate."""
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * cfg.active_params * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * cfg.active_params * tokens
+    # decode: one token per sequence
+    return 2.0 * cfg.active_params * shape.global_batch
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               variant: str = "base", n_microbatches: int = 4) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = supports(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "variant": variant, "status": "skipped", "reason": why}
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides, cfg = VARIANTS[variant](cfg, shape)
+    overrides = dict(overrides)
+    n_microbatches = int(overrides.pop("_microbatches", n_microbatches))
+    rules = ShardingRules.create(mesh, overrides)
+    model = build(cfg)
+
+    params_s = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    batch_s = input_specs(cfg, shape)
+
+    with jax.set_mesh(mesh):
+        if shape.mode == "train":
+            opt = AdamW(lr=3e-4)
+            opt_s = jax.eval_shape(opt.init, params_s)
+            fn = step_lib.make_train_step(model, opt, rules,
+                                          n_microbatches=n_microbatches)
+            in_sh, out_sh = step_lib.train_shardings(
+                model, rules, mesh, params_s, opt_s, batch_s)
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(
+                params_s, opt_s, batch_s)
+        elif shape.mode == "prefill":
+            fn = step_lib.make_prefill_step(model, rules)
+            cache_s = jax.eval_shape(fn, params_s, batch_s)[1]
+            in_sh, out_sh = step_lib.prefill_shardings(
+                model, rules, mesh, params_s, batch_s, cache_s)
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(params_s, batch_s)
+        else:  # decode
+            if cfg.kind == "encdec":
+                cache_s = jax.eval_shape(
+                    lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                             enc_len=4096))
+            else:
+                cache_s = jax.eval_shape(
+                    lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            fn = step_lib.make_decode_step(model, rules)
+            tok_s = batch_s["token"]
+            pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+            in_sh, out_sh = step_lib.decode_shardings(
+                model, rules, mesh, params_s, cache_s, tok_s)
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(
+                params_s, cache_s, tok_s, pos_s)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # cost_analysis() on the CPU backend counts while bodies ONCE (trip
+    # counts ignored) — re-derive flops/bytes/collectives from the scheduled
+    # HLO with trip-count multipliers (see hlo_analysis.py). All values are
+    # PER DEVICE (the module is the per-partition SPMD program).
+    ana = analyze(hlo)
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    flops = float(ana["flops"])            # per device
+    bytes_acc = float(ana["bytes"])        # per device
+    coll = {k: float(v) for k, v in ana["collectives"].items()}
+    mf = model_flops(cfg, shape)
+    t_comp = flops / HW.PEAK_FLOPS_BF16
+    t_mem = bytes_acc / HW.HBM_BW
+    t_coll = coll["total"] / HW.ICI_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "variant": variant, "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_flops": flops, "hlo_bytes": bytes_acc,
+        "hlo_flops_raw_costanalysis": float(cost.get("flops", 0.0)),
+        "collective_bytes": coll,
+        "model_flops": mf,
+        "model_flops_per_device": mf / chips,
+        "useful_flops_ratio": (mf / chips) / flops if flops else 0.0,
+        "analyzer_warnings": ana["warnings"][:5],
+        **{k: v for k, v in terms.items()},
+        "bottleneck": bottleneck,
+        "bytes_per_device": {
+            "argument": getattr(mem, "argument_size_in_bytes", 0),
+            "output": getattr(mem, "output_size_in_bytes", 0),
+            "temp": getattr(mem, "temp_size_in_bytes", 0),
+            "peak": (getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "fits_hbm": (getattr(mem, "argument_size_in_bytes", 0)
+                     + getattr(mem, "temp_size_in_bytes", 0)) < HW.HBM_BYTES,
+    }
+    return rec
+
+
+def append_cache(rec: dict):
+    path = os.path.abspath(CACHE_PATH)
+    data = []
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    key = (rec["arch"], rec["shape"], rec["multi_pod"], rec["variant"])
+    data = [r for r in data
+            if (r["arch"], r["shape"], r["multi_pod"], r["variant"]) != key]
+    data.append(rec)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None, choices=list(SHAPES))
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--variant", default="base", choices=list(VARIANTS))
+    p.add_argument("--skip-cached", action="store_true")
+    args = p.parse_args(argv)
+
+    cells = []
+    archs = ARCH_NAMES if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cached = set()
+    if args.skip_cached and os.path.exists(os.path.abspath(CACHE_PATH)):
+        with open(os.path.abspath(CACHE_PATH)) as f:
+            cached = {(r["arch"], r["shape"], r["multi_pod"], r["variant"])
+                      for r in json.load(f) if r.get("status") in ("ok", "skipped")}
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                if (a, s, mp, args.variant) in cached:
+                    print(f"[cached] {a} x {s} mp={mp}")
+                    continue
+                cells.append((a, s, mp))
+
+    n_fail = 0
+    for a, s, mp in cells:
+        label = f"{a} x {s} x {'2x16x16' if mp else '16x16'} [{args.variant}]"
+        try:
+            rec = lower_cell(a, s, multi_pod=mp, variant=args.variant)
+            append_cache(rec)
+            if rec["status"] == "skipped":
+                print(f"[skip] {label}: {rec['reason'][:60]}...")
+            else:
+                print(f"[ok]   {label}: flops={rec['hlo_flops']:.3e} "
+                      f"coll={rec['collective_bytes']['total']:.3e}B "
+                      f"peak={rec['bytes_per_device']['peak']/2**30:.2f}GiB "
+                      f"bottleneck={rec['bottleneck']} "
+                      f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+        except Exception as e:  # noqa: BLE001 — report and continue the sweep
+            n_fail += 1
+            print(f"[FAIL] {label}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+            append_cache({"arch": a, "shape": s, "multi_pod": mp,
+                          "variant": args.variant, "status": "fail",
+                          "error": f"{type(e).__name__}: {e}"})
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production meshes (TPU v5e pods).
+
+``make_production_mesh`` is a FUNCTION (no module-level device access), so
+importing this module never touches jax device state — required for the
+smoke tests which must see 1 device while the dry-run sees 512 placeholder
+host devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (= 256 chips, one v5e pod) or 2x16x16 (2 pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh for tests / elastic re-shard."""
+    return jax.make_mesh(shape, axes)
+
+
+class HW:
+    """TPU v5e hardware constants used by the roofline analysis."""
+
+    PEAK_FLOPS_BF16 = 197e12     # per chip, FLOP/s
+    HBM_BW = 819e9               # bytes/s per chip
+    ICI_BW = 50e9                # bytes/s per link (~per chip, one direction)
+    HBM_BYTES = 16 * 2 ** 30     # 16 GiB per chip
+    CHIPS_PER_POD = 256

@@ -1,0 +1,195 @@
+"""Step factories + sharding trees for train / prefill / decode.
+
+Everything here is mesh-agnostic until ``*_shardings`` binds the logical
+rules to a concrete mesh; the dry-run, the trainer, and the server all share
+these factories so the compiled artifact analyzed in §Roofline is exactly
+what would run on hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import ShardingRules, logical_to_spec
+from repro.models.api import Model
+from repro.optim.adamw import AdamW, OptState
+
+__all__ = [
+    "make_train_step", "make_prefill_step", "make_decode_step",
+    "train_shardings", "prefill_shardings", "decode_shardings",
+    "named", "batch_axes_tree",
+]
+
+
+def named(mesh: Mesh, spec_tree):
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _fit_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the corresponding dim (replicate
+    fallback) — jit in/out shardings require exact divisibility, unlike
+    in-graph constraints. E.g. kv_heads=4 cannot split over model=16, so the
+    K/V projections replicate over the model axis."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        kept: list[str] = []
+        size = 1
+        for a in axes:
+            n = mesh.shape[a]
+            if shape[i] % (size * n) == 0:
+                kept.append(a)
+                size *= n
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return P(*out)
+
+
+def fitted(mesh: Mesh, spec_tree, shapes_tree):
+    """Shape-aware NamedSharding tree (divisibility-safe)."""
+    return jax.tree.map(
+        lambda s, sh: NamedSharding(mesh, _fit_spec(s, sh.shape, mesh)),
+        spec_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axes_tree(model: Model, mode: str) -> dict:
+    """Logical axes for the input batch dict of each mode."""
+    cfg = model.cfg
+    if mode in ("train", "prefill"):
+        t = {"tokens": ("batch", "seq")}
+        if cfg.kind == "encdec":
+            t["frames"] = ("batch", "seq", None)
+        if cfg.kind == "vlm":
+            t["vision"] = ("batch", "seq", None)
+        if mode == "train":
+            t["labels"] = ("batch", "seq")
+        return t
+    return {"token": ("cache_batch", None)}
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: Model, optimizer: AdamW, rules: ShardingRules,
+                    n_microbatches: int = 1):
+    """Training step with gradient accumulation.
+
+    ``n_microbatches > 1`` scans over microbatch slices accumulating f32
+    grads — the standard large-scale memory lever: transient activation
+    footprint scales with the microbatch, while the optimizer still sees the
+    full global batch. (The per-device peak in EXPERIMENTS.md §Dry-run is
+    reported with the default microbatching.)
+    """
+    def grad_fn(params, mb):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, mb, rules))(params)
+        return loss, grads
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def slice_mb(i):
+                return jax.tree.map(
+                    lambda x: x.reshape(
+                        (n_microbatches, x.shape[0] // n_microbatches)
+                        + x.shape[1:])[i],
+                    batch)
+
+            def body(carry, i):
+                loss_acc, g_acc = carry
+                loss, g = grad_fn(params, slice_mb(i))
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros(()), zeros), jnp.arange(n_microbatches))
+            loss = loss / n_microbatches
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+        new_params, new_opt, gnorm = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": new_opt.step}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def train_shardings(model: Model, rules: ShardingRules, mesh: Mesh,
+                    params_shapes, opt_shapes, batch_shapes):
+    p_spec = logical_to_spec(rules, model.axes())
+    p_sh = fitted(mesh, p_spec, params_shapes)
+    opt_sh = OptState(step=NamedSharding(mesh, P()),
+                      m=fitted(mesh, p_spec, opt_shapes.m),
+                      v=fitted(mesh, p_spec, opt_shapes.v))
+    b_spec = logical_to_spec(rules, batch_axes_tree(model, "train"))
+    b_sh = fitted(mesh, b_spec, batch_shapes)
+    metrics_sh = named(mesh, {"loss": P(), "grad_norm": P(), "step": P()})
+    return (p_sh, opt_sh, b_sh), (p_sh, opt_sh, metrics_sh)
+
+
+# ---------------------------------------------------------------------------
+# serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(model: Model, rules: ShardingRules,
+                      max_len: int | None = None):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, rules, max_len=max_len)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        return next_tok.astype(jnp.int32), cache
+
+    return prefill_step
+
+
+def prefill_shardings(model: Model, rules: ShardingRules, mesh: Mesh,
+                      params_shapes, batch_shapes, cache_shapes):
+    p_spec = logical_to_spec(rules, model.axes())
+    b_spec = logical_to_spec(rules, batch_axes_tree(model, "prefill"))
+    cache_spec = logical_to_spec(rules, model.cache_axes())
+    B = batch_shapes["tokens"].shape[0]
+    tok = fitted(mesh, rules.spec("cache_batch", None),
+                 jax.ShapeDtypeStruct((B, 1), jnp.int32))
+    in_s = (fitted(mesh, p_spec, params_shapes),
+            fitted(mesh, b_spec, batch_shapes))
+    out_s = (tok, fitted(mesh, cache_spec, cache_shapes))
+    return in_s, out_s
+
+
+def make_decode_step(model: Model, rules: ShardingRules):
+    """One-token greedy serve step: (params, cache, token, pos) ->
+    (next_token, cache)."""
+    def decode_step(params, cache, token, pos):
+        logits, new_cache = model.decode(params, cache, token, pos, rules)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        return next_tok.astype(jnp.int32), new_cache
+
+    return decode_step
+
+
+def decode_shardings(model: Model, rules: ShardingRules, mesh: Mesh,
+                     params_shapes, cache_shapes, token_shape):
+    p_spec = logical_to_spec(rules, model.axes())
+    cache_spec = logical_to_spec(rules, model.cache_axes())
+    tok = fitted(mesh, rules.spec("cache_batch", None), token_shape)
+    pos = NamedSharding(mesh, P())
+    p_sh = fitted(mesh, p_spec, params_shapes)
+    c_sh = fitted(mesh, cache_spec, cache_shapes)
+    in_s = (p_sh, c_sh, tok, pos)
+    out_s = (tok, c_sh)
+    return in_s, out_s

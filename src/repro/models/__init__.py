@@ -1,0 +1,4 @@
+from repro.models.api import Model, build
+from repro.models.config import ModelConfig
+
+__all__ = ["Model", "ModelConfig", "build"]

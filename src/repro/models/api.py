@@ -1,0 +1,81 @@
+"""Model zoo entry point: ``build(cfg)`` returns a uniform Model facade.
+
+Every family exposes init/axes/forward/prefill/decode with the same
+signatures, so the trainer, server, dry-run, and fleet scheduler are
+architecture-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules
+from repro.distributed.xent import cross_entropy
+from repro.models import decoder, encdec, hybrid, ssm
+from repro.models.config import ModelConfig
+
+__all__ = ["Model", "build"]
+
+_FAMILIES = {
+    "decoder": decoder,
+    "moe": decoder,
+    "vlm": decoder,
+    "encdec": encdec,
+    "ssm": ssm,
+    "hybrid": hybrid,
+}
+
+AUX_LOSS_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    _mod: Any
+
+    def init(self, key) -> dict:
+        return self._mod.init(self.cfg, key)
+
+    def axes(self) -> dict:
+        return self._mod.axes(self.cfg)
+
+    def forward(self, params, batch, rules: ShardingRules | None = None):
+        return self._mod.forward(params, batch, self.cfg, rules)
+
+    def loss(self, params, batch, rules: ShardingRules | None = None):
+        """Mean next-token cross entropy (+ MoE aux) over batch['labels']."""
+        logits, aux = self.forward(params, batch, rules)
+        labels = batch["labels"]
+        if logits.shape[1] != labels.shape[1]:
+            # VLM: drop the vision-prefix positions.
+            logits = logits[:, -labels.shape[1]:, :]
+        loss = cross_entropy(logits, labels, rules)
+        return loss + AUX_LOSS_WEIGHT * aux
+
+    def prefill(self, params, batch, rules: ShardingRules | None = None,
+                max_len: int | None = None):
+        max_len = max_len or batch["tokens"].shape[1]
+        return self._mod.prefill(params, batch, self.cfg, rules, max_len)
+
+    def decode(self, params, cache, token, pos,
+               rules: ShardingRules | None = None):
+        return self._mod.decode(params, cache, token, pos, self.cfg, rules)
+
+    def init_cache(self, batch: int, max_len: int, **kw):
+        return self._mod.init_cache(self.cfg, batch, max_len, **kw)
+
+    def cache_axes(self) -> dict:
+        return self._mod.cache_axes(self.cfg)
+
+    def param_count(self, params) -> int:
+        return sum(x.size for x in jax.tree.leaves(params))
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.kind not in _FAMILIES:
+        raise ValueError(f"unknown model kind {cfg.kind!r}")
+    return Model(cfg=cfg, _mod=_FAMILIES[cfg.kind])

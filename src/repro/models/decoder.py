@@ -1,0 +1,267 @@
+"""Decoder-only LM stack (dense, MoE, and VLM variants).
+
+Layers are scan-stacked (leading ``L`` dim on every layer param) and executed
+with ``jax.lax.scan`` — essential here: compile time and HLO size stay
+O(1) in depth, which is what makes the 40-cell x 512-device dry-run feasible
+on a single host. ``cfg.remat`` wraps the block in jax.checkpoint with a
+dots-saveable policy (activation recomputation in backward).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models import layers as ll
+from repro.models.config import ModelConfig
+
+__all__ = ["init", "axes", "forward", "prefill", "decode", "init_cache"]
+
+
+def _layer_keys(key, n):
+    return jax.random.split(key, n)
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    kd, ke, kl, kh = jax.random.split(key, 4)
+    D, H, K, dh, F, V, L = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh,
+                            cfg.d_ff, cfg.vocab, cfg.n_layers)
+
+    def stack(fn):
+        outs = [fn(k) for k in _layer_keys(kl, L)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+
+    def one_layer(k):
+        k1, k2, k3, k4, k5, k6, k7 = jax.random.split(k, 7)
+        p = {
+            "ln1": jnp.ones((D,), jnp.float32),
+            "ln2": jnp.ones((D,), jnp.float32),
+            "attn": {
+                "wq": ll.dense_init(k1, (D, H, dh)),
+                "wk": ll.dense_init(k2, (D, K, dh)),
+                "wv": ll.dense_init(k3, (D, K, dh)),
+                "wo": ll.dense_init(k4, (H, dh, D), in_axis=(0, 1)),
+            },
+        }
+        if cfg.qkv_bias:
+            p["attn"]["bq"] = jnp.zeros((H, dh), jnp.float32)
+            p["attn"]["bk"] = jnp.zeros((K, dh), jnp.float32)
+            p["attn"]["bv"] = jnp.zeros((K, dh), jnp.float32)
+        if cfg.kind == "moe":
+            E, dE = cfg.n_experts, cfg.d_expert
+            p["ffn"] = {
+                "router": ll.dense_init(k5, (D, E)),
+                "experts": {
+                    "w_gate": ll.dense_init(k5, (E, D, dE), in_axis=1),
+                    "w_up": ll.dense_init(k6, (E, D, dE), in_axis=1),
+                    "w_down": ll.dense_init(k7, (E, dE, D), in_axis=1),
+                },
+            }
+            if cfg.n_shared_experts:
+                Fs = cfg.n_shared_experts * dE
+                p["ffn"]["shared"] = {
+                    "w_gate": ll.dense_init(k5, (D, Fs)),
+                    "w_up": ll.dense_init(k6, (D, Fs)),
+                    "w_down": ll.dense_init(k7, (Fs, D)),
+                }
+        else:
+            p["ffn"] = {
+                "w_gate": ll.dense_init(k5, (D, F)),
+                "w_up": ll.dense_init(k6, (D, F)),
+                "w_down": ll.dense_init(k7, (F, D)),
+            }
+        return p
+
+    params = {
+        "embed": ll.dense_init(kd, (V, D), in_axis=1),
+        "layers": stack(one_layer),
+        "final_norm": jnp.ones((D,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ll.dense_init(kh, (D, V))
+    if cfg.kind == "vlm":
+        # Stub frontend: a learned projection applied to precomputed patch
+        # embeddings (the CLIP tower itself is out of scope per assignment).
+        params["vision_proj"] = ll.dense_init(ke, (D, D))
+    return params
+
+
+def axes(cfg: ModelConfig) -> dict:
+    """Logical-axis tree mirroring ``init``'s param tree."""
+    a = {
+        "embed": ("vocab", "fsdp"),
+        "final_norm": (None,),
+        "layers": {
+            "ln1": ("layers", None),
+            "ln2": ("layers", None),
+            "attn": {
+                "wq": ("layers", "fsdp", "heads", None),
+                "wk": ("layers", "fsdp", "kv_heads", None),
+                "wv": ("layers", "fsdp", "kv_heads", None),
+                "wo": ("layers", "heads", None, "fsdp"),
+            },
+        },
+    }
+    if cfg.qkv_bias:
+        a["layers"]["attn"]["bq"] = ("layers", "heads", None)
+        a["layers"]["attn"]["bk"] = ("layers", "kv_heads", None)
+        a["layers"]["attn"]["bv"] = ("layers", "kv_heads", None)
+    if cfg.kind == "moe":
+        a["layers"]["ffn"] = {
+            "router": ("layers", None, "experts"),
+            "experts": {
+                "w_gate": ("layers", "experts", "fsdp", None),
+                "w_up": ("layers", "experts", "fsdp", None),
+                "w_down": ("layers", "experts", None, "fsdp"),
+            },
+        }
+        if cfg.n_shared_experts:
+            a["layers"]["ffn"]["shared"] = {
+                "w_gate": ("layers", "fsdp", "d_ff"),
+                "w_up": ("layers", "fsdp", "d_ff"),
+                "w_down": ("layers", "d_ff", "fsdp"),
+            }
+    else:
+        a["layers"]["ffn"] = {
+            "w_gate": ("layers", "fsdp", "d_ff"),
+            "w_up": ("layers", "fsdp", "d_ff"),
+            "w_down": ("layers", "d_ff", "fsdp"),
+        }
+    if not cfg.tie_embeddings:
+        a["lm_head"] = ("fsdp", "vocab")
+    if cfg.kind == "vlm":
+        a["vision_proj"] = ("fsdp", None)
+    return a
+
+
+def _block(x, lp, cfg: ModelConfig, rules, positions):
+    y = ll.attention(ll.rms_norm(x, lp["ln1"]), lp["attn"], cfg, rules,
+                     positions=positions)
+    x = x + y
+    h = ll.rms_norm(x, lp["ln2"])
+    if cfg.kind == "moe":
+        f, aux = ll.moe_ffn(h, lp["ffn"], cfg, rules)
+    else:
+        f, aux = ll.swiglu(h, lp["ffn"], rules), jnp.zeros((), jnp.float32)
+    return x + f, aux
+
+
+def _scan_blocks(x, params, cfg: ModelConfig, rules, positions):
+    block = _block
+    if cfg.remat:
+        block = jax.checkpoint(
+            block, static_argnums=(2, 3))
+
+    def body(carry, lp):
+        x, aux = carry
+        x2, a = block(x, lp, cfg, rules, positions)
+        return (x2, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    return x, aux
+
+
+def _embed(params, tokens, cfg: ModelConfig, rules, vision=None):
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    if cfg.kind == "vlm" and vision is not None:
+        v = jnp.einsum("bpd,de->bpe", vision.astype(cfg.dtype),
+                       params["vision_proj"].astype(cfg.dtype))
+        x = jnp.concatenate([v, x], axis=1)
+    return constrain(x, rules, "batch", "seq", None)
+
+
+def forward(params, batch, cfg: ModelConfig, rules: ShardingRules | None):
+    """Training/prefill forward -> (logits, aux_loss)."""
+    tokens = batch["tokens"]
+    x = _embed(params, tokens, cfg, rules, batch.get("vision"))
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    x, aux = _scan_blocks(x, params, cfg, rules, positions)
+    x = ll.rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return constrain(logits, rules, "batch", "seq", "vocab"), aux
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    return {
+        "k": ("layers", "cache_batch", "cache_seq", None, None),
+        "v": ("layers", "cache_batch", "cache_seq", None, None),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.dh
+    S = min(max_len, cfg.window) if cfg.window > 0 else max_len
+    return {
+        "k": jnp.zeros((L, batch, S, K, dh), dtype),
+        "v": jnp.zeros((L, batch, S, K, dh), dtype),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, rules, max_len: int):
+    """Run the full prompt, returning last-position logits + a filled cache."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape[0], tokens.shape[1]
+    x = _embed(params, tokens, cfg, rules, batch.get("vision"))
+    Sx = x.shape[1]
+    positions = jnp.arange(Sx)[None, :]
+
+    # VLM prompts are vision prefix + text: the cache must cover both.
+    cache = init_cache(cfg, B, max(max_len, Sx), jnp.bfloat16)
+
+    def body(carry, inp):
+        x, = carry
+        lp = inp
+        y, (k, v) = ll.attention(ll.rms_norm(x, lp["ln1"]), lp["attn"], cfg,
+                                 rules, positions=positions, return_kv=True)
+        x = x + y
+        h = ll.rms_norm(x, lp["ln2"])
+        if cfg.kind == "moe":
+            f, _ = ll.moe_ffn(h, lp["ffn"], cfg, rules)
+        else:
+            f = ll.swiglu(h, lp["ffn"], rules)
+        return (x + f,), (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16))
+
+    (x,), (ks, vs) = jax.lax.scan(body, (x,), params["layers"])
+    Sc = cache["k"].shape[2]
+    if cfg.window > 0 and Sx > Sc:
+        ks, vs = ks[:, :, -Sc:], vs[:, :, -Sc:]
+        cache = {"k": ks, "v": vs}
+    else:
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], ks, 0, axis=2)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vs, 0, axis=2)
+    x = ll.rms_norm(x[:, -1:, :], params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return logits, cache
+
+
+def decode(params, cache, token, pos, cfg: ModelConfig,
+           rules: ShardingRules | None):
+    """One decode step. token: (B, 1) int; pos: scalar position index."""
+    x = params["embed"].astype(cfg.dtype)[token]
+    x = constrain(x, rules, "decode_batch", None, None)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        y, ck, cv = ll.attention_decode(
+            ll.rms_norm(x, lp["ln1"]), lp["attn"], ck, cv, pos, cfg, rules)
+        x = x + y
+        h = ll.rms_norm(x, lp["ln2"])
+        if cfg.kind == "moe":
+            f, _ = ll.moe_ffn(h, lp["ffn"], cfg, rules)
+        else:
+            f = ll.swiglu(h, lp["ffn"], rules)
+        return x + f, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]))
+    x = ll.rms_norm(x, params["final_norm"])
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return logits, {"k": ks, "v": vs}

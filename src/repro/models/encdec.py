@@ -1,0 +1,244 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The audio frontend is a STUB per the assignment: ``batch["frames"]`` carries
+precomputed frame embeddings (B, F, d_model) — the only learned frontend
+piece is a projection. The encoder is bidirectional; the decoder is causal
+with per-layer cross attention over the encoder output. Decode shapes run
+the DECODER against a cached encoder output (the encoder is not re-run per
+token).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models import layers as ll
+from repro.models.config import ModelConfig
+
+__all__ = ["init", "axes", "forward", "prefill", "decode", "init_cache",
+           "encode"]
+
+
+def _attn_params(key, D, H, K, dh):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": ll.dense_init(k1, (D, H, dh)),
+        "wk": ll.dense_init(k2, (D, K, dh)),
+        "wv": ll.dense_init(k3, (D, K, dh)),
+        "wo": ll.dense_init(k4, (H, dh, D), in_axis=(0, 1)),
+    }
+
+
+def _ffn_params(key, D, F):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": ll.dense_init(k1, (D, F)),
+        "w_up": ll.dense_init(k2, (D, F)),
+        "w_down": ll.dense_init(k3, (F, D)),
+    }
+
+
+_ATTN_AXES = {
+    "wq": ("layers", "fsdp", "heads", None),
+    "wk": ("layers", "fsdp", "kv_heads", None),
+    "wv": ("layers", "fsdp", "kv_heads", None),
+    "wo": ("layers", "heads", None, "fsdp"),
+}
+_FFN_AXES = {
+    "w_gate": ("layers", "fsdp", "d_ff"),
+    "w_up": ("layers", "fsdp", "d_ff"),
+    "w_down": ("layers", "d_ff", "fsdp"),
+}
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    D, H, K, dh, F, V = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh,
+                         cfg.d_ff, cfg.vocab)
+    ke, kd, kl1, kl2, kh, kf = jax.random.split(key, 6)
+
+    def enc_layer(k):
+        ka, kf_ = jax.random.split(k)
+        return {
+            "ln1": jnp.ones((D,), jnp.float32),
+            "ln2": jnp.ones((D,), jnp.float32),
+            "attn": _attn_params(ka, D, H, K, dh),
+            "ffn": _ffn_params(kf_, D, F),
+        }
+
+    def dec_layer(k):
+        ka, kc, kf_ = jax.random.split(k, 3)
+        return {
+            "ln1": jnp.ones((D,), jnp.float32),
+            "ln_cross": jnp.ones((D,), jnp.float32),
+            "ln2": jnp.ones((D,), jnp.float32),
+            "attn": _attn_params(ka, D, H, K, dh),
+            "cross": _attn_params(kc, D, H, K, dh),
+            "ffn": _ffn_params(kf_, D, F),
+        }
+
+    enc = [enc_layer(k) for k in jax.random.split(kl1, cfg.n_enc_layers)]
+    dec = [dec_layer(k) for k in jax.random.split(kl2, cfg.n_layers)]
+    return {
+        "frame_proj": ll.dense_init(kf, (D, D)),
+        "embed": ll.dense_init(kd, (V, D), in_axis=1),
+        "enc_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+        "enc_norm": jnp.ones((D,), jnp.float32),
+        "dec_layers": jax.tree.map(lambda *xs: jnp.stack(xs), *dec),
+        "final_norm": jnp.ones((D,), jnp.float32),
+        "lm_head": ll.dense_init(kh, (D, V)),
+    }
+
+
+def axes(cfg: ModelConfig) -> dict:
+    return {
+        "frame_proj": ("fsdp", None),
+        "embed": ("vocab", "fsdp"),
+        "enc_norm": (None,),
+        "final_norm": (None,),
+        "lm_head": ("fsdp", "vocab"),
+        "enc_layers": {
+            "ln1": ("layers", None), "ln2": ("layers", None),
+            "attn": dict(_ATTN_AXES), "ffn": dict(_FFN_AXES),
+        },
+        "dec_layers": {
+            "ln1": ("layers", None), "ln_cross": ("layers", None),
+            "ln2": ("layers", None),
+            "attn": dict(_ATTN_AXES), "cross": dict(_ATTN_AXES),
+            "ffn": dict(_FFN_AXES),
+        },
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, rules):
+    x = jnp.einsum("bfd,de->bfe", frames.astype(cfg.dtype),
+                   params["frame_proj"].astype(cfg.dtype))
+    x = constrain(x, rules, "batch", "seq", None)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def block(x, lp, cfg, rules, positions):
+        y = ll.attention(ll.rms_norm(x, lp["ln1"]), lp["attn"], cfg, rules,
+                         positions=positions, causal=False)
+        x = x + y
+        return x + ll.swiglu(ll.rms_norm(x, lp["ln2"]), lp["ffn"], rules)
+
+    if cfg.remat:
+        block = jax.checkpoint(
+            block, static_argnums=(2, 3))
+
+    def body(x, lp):
+        return block(x, lp, cfg, rules, positions), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return ll.rms_norm(x, params["enc_norm"])
+
+
+def _dec_block(x, lp, enc_out, cfg, rules, positions):
+    y = ll.attention(ll.rms_norm(x, lp["ln1"]), lp["attn"], cfg, rules,
+                     positions=positions, causal=True)
+    x = x + y
+    y = ll.attention(ll.rms_norm(x, lp["ln_cross"]), lp["cross"], cfg, rules,
+                     kv_source=enc_out)
+    x = x + y
+    return x + ll.swiglu(ll.rms_norm(x, lp["ln2"]), lp["ffn"], rules)
+
+
+def forward(params, batch, cfg: ModelConfig, rules: ShardingRules | None):
+    enc_out = encode(params, batch["frames"], cfg, rules)
+    tokens = batch["tokens"]
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = constrain(x, rules, "batch", "seq", None)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    block = _dec_block
+    if cfg.remat:
+        block = jax.checkpoint(
+            block, static_argnums=(3, 4))
+
+    def body(x, lp):
+        return block(x, lp, enc_out, cfg, rules, positions), None
+
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = ll.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return constrain(logits, rules, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    return {
+        "k": ("layers", "cache_batch", "cache_seq", None, None),
+        "v": ("layers", "cache_batch", "cache_seq", None, None),
+        "cross_k": ("layers", "cache_batch", "cache_seq", None, None),
+        "cross_v": ("layers", "cache_batch", "cache_seq", None, None),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int,
+               dtype=jnp.bfloat16):
+    L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.dh
+    return {
+        "k": jnp.zeros((L, batch, max_len, K, dh), dtype),
+        "v": jnp.zeros((L, batch, max_len, K, dh), dtype),
+        "cross_k": jnp.zeros((L, batch, enc_len, K, dh), dtype),
+        "cross_v": jnp.zeros((L, batch, enc_len, K, dh), dtype),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, rules, max_len: int):
+    """Encode the frames, run the decoder prompt, build both caches."""
+    enc_out = encode(params, batch["frames"], cfg, rules)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = constrain(x, rules, "batch", "seq", None)
+    positions = jnp.arange(S)[None, :]
+    cache = init_cache(cfg, B, max_len, enc_out.shape[1])
+
+    def body(x, lp):
+        y, (k, v) = ll.attention(ll.rms_norm(x, lp["ln1"]), lp["attn"], cfg,
+                                 rules, positions=positions, return_kv=True)
+        x = x + y
+        y, (ck, cv) = ll.attention(ll.rms_norm(x, lp["ln_cross"]), lp["cross"],
+                                   cfg, rules, kv_source=enc_out,
+                                   return_kv=True)
+        x = x + y
+        x = x + ll.swiglu(ll.rms_norm(x, lp["ln2"]), lp["ffn"], rules)
+        return x, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+                   ck.astype(jnp.bfloat16), cv.astype(jnp.bfloat16))
+
+    x, (ks, vs, cks, cvs) = jax.lax.scan(body, x, params["dec_layers"])
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], ks, 0, 2)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vs, 0, 2)
+    cache["cross_k"], cache["cross_v"] = cks, cvs
+    x = ll.rms_norm(x[:, -1:, :], params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, cache
+
+
+def decode(params, cache, token, pos, cfg: ModelConfig,
+           rules: ShardingRules | None):
+    x = params["embed"].astype(cfg.dtype)[token]
+    x = constrain(x, rules, "decode_batch", None, None)
+
+    def body(x, inp):
+        lp, ck, cv, xk, xv = inp
+        y, ck, cv = ll.attention_decode(
+            ll.rms_norm(x, lp["ln1"]), lp["attn"], ck, cv, pos, cfg, rules)
+        x = x + y
+        y, _, _ = ll.attention_decode(
+            ll.rms_norm(x, lp["ln_cross"]), lp["cross"], xk, xv, pos, cfg,
+            rules, cross=True)
+        x = x + y
+        x = x + ll.swiglu(ll.rms_norm(x, lp["ln2"]), lp["ffn"], rules)
+        return x, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = ll.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, {"k": ks, "v": vs, "cross_k": cache["cross_k"],
+                    "cross_v": cache["cross_v"]}

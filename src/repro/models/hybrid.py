@@ -1,0 +1,277 @@
+"""Hymba-style hybrid stack — parallel attention + SSM heads per layer.
+
+Each layer runs a sliding-window GQA attention branch and a Mamba-2 SSD
+branch on the same normed input; branch outputs are RMS-normed and averaged
+before the residual add (Hymba's fusion). ``n_meta_tokens`` learned meta
+tokens are prepended to the sequence and stay visible to every window
+(Hymba's "memory anchors" for SWA). Global context is carried by the SSM
+branch, so attention stays windowed in ALL layers — this is the deviation
+(documented in DESIGN.md §Arch-applicability) that keeps the ``long_500k``
+decode cell O(window) in memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models import layers as ll
+from repro.models import ssm as ssm_mod
+from repro.models.config import ModelConfig
+
+__all__ = ["init", "axes", "forward", "prefill", "decode", "init_cache"]
+
+G = 1
+
+
+def _ssm_cfg(cfg: ModelConfig) -> ModelConfig:
+    """View of the config for the SSD branch dims."""
+    return cfg
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    D, H, K, dh, F, V, L = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh,
+                            cfg.d_ff, cfg.vocab, cfg.n_layers)
+    di = cfg.d_inner_ssm
+    Hs = cfg.n_ssm_heads
+    N = cfg.d_state
+    conv_ch = di + 2 * G * N
+    kd, kl, kh, km = jax.random.split(key, 4)
+
+    def one_layer(k):
+        k1, k2, k3, k4, k5, k6, k7, k8 = jax.random.split(k, 8)
+        return {
+            "ln1": jnp.ones((D,), jnp.float32),
+            "ln2": jnp.ones((D,), jnp.float32),
+            "norm_attn": jnp.ones((D,), jnp.float32),
+            "norm_ssm": jnp.ones((D,), jnp.float32),
+            "attn": {
+                "wq": ll.dense_init(k1, (D, H, dh)),
+                "wk": ll.dense_init(k2, (D, K, dh)),
+                "wv": ll.dense_init(k3, (D, K, dh)),
+                "wo": ll.dense_init(k4, (H, dh, D), in_axis=(0, 1)),
+            },
+            "ssm": {
+                "in_proj": ll.dense_init(k5, (D, 2 * di + 2 * G * N + Hs)),
+                "conv_w": 0.1 * jax.random.normal(
+                    k6, (cfg.ssm_conv, conv_ch), jnp.float32),
+                "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+                "A_log": jnp.log(jnp.linspace(1.0, 16.0, Hs, jnp.float32)),
+                "D_skip": jnp.ones((Hs,), jnp.float32),
+                "dt_bias": jnp.zeros((Hs,), jnp.float32),
+                "out_norm": jnp.ones((di,), jnp.float32),
+                "out_proj": ll.dense_init(k7, (di, D)),
+            },
+            "ffn": {
+                "w_gate": ll.dense_init(k8, (D, F)),
+                "w_up": ll.dense_init(k8, (D, F)),
+                "w_down": ll.dense_init(k8, (F, D)),
+            },
+        }
+
+    outs = [one_layer(k) for k in jax.random.split(kl, L)]
+    return {
+        "embed": ll.dense_init(kd, (V, D), in_axis=1),
+        "meta": 0.02 * jax.random.normal(km, (cfg.n_meta_tokens, D),
+                                         jnp.float32),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *outs),
+        "final_norm": jnp.ones((D,), jnp.float32),
+        "lm_head": ll.dense_init(kh, (D, V)),
+    }
+
+
+def axes(cfg: ModelConfig) -> dict:
+    return {
+        "embed": ("vocab", "fsdp"),
+        "meta": (None, None),
+        "final_norm": (None,),
+        "lm_head": ("fsdp", "vocab"),
+        "layers": {
+            "ln1": ("layers", None), "ln2": ("layers", None),
+            "norm_attn": ("layers", None), "norm_ssm": ("layers", None),
+            "attn": {
+                "wq": ("layers", "fsdp", "heads", None),
+                "wk": ("layers", "fsdp", "kv_heads", None),
+                "wv": ("layers", "fsdp", "kv_heads", None),
+                "wo": ("layers", "heads", None, "fsdp"),
+            },
+            "ssm": {
+                "in_proj": ("layers", "fsdp", "d_ff"),
+                "conv_w": ("layers", None, "d_ff"),
+                "conv_b": ("layers", "d_ff"),
+                "A_log": ("layers", None),
+                "D_skip": ("layers", None),
+                "dt_bias": ("layers", None),
+                "out_norm": ("layers", "d_ff"),
+                "out_proj": ("layers", "d_ff", "fsdp"),
+            },
+            "ffn": {
+                "w_gate": ("layers", "fsdp", "d_ff"),
+                "w_up": ("layers", "fsdp", "d_ff"),
+                "w_down": ("layers", "d_ff", "fsdp"),
+            },
+        },
+    }
+
+
+def _block(x, lp, cfg: ModelConfig, rules, positions):
+    h = ll.rms_norm(x, lp["ln1"])
+    a = ll.attention(h, lp["attn"], cfg, rules, positions=positions,
+                     window=cfg.window, prefix_len=cfg.n_meta_tokens)
+    s, _, _ = ssm_mod._mix(h, lp["ssm"], cfg, rules)
+    y = 0.5 * (ll.rms_norm(a, lp["norm_attn"]) + ll.rms_norm(s, lp["norm_ssm"]))
+    x = x + y
+    x = x + ll.swiglu(ll.rms_norm(x, lp["ln2"]), lp["ffn"], rules)
+    return x
+
+
+def _with_meta(params, tokens, cfg, rules):
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    B = x.shape[0]
+    meta = jnp.broadcast_to(params["meta"].astype(cfg.dtype)[None],
+                            (B, cfg.n_meta_tokens, cfg.d_model))
+    x = jnp.concatenate([meta, x], axis=1)
+    return constrain(x, rules, "batch", "seq", None)
+
+
+def forward(params, batch, cfg: ModelConfig, rules: ShardingRules | None):
+    tokens = batch["tokens"]
+    x = _with_meta(params, tokens, cfg, rules)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    block = _block
+    if cfg.remat:
+        block = jax.checkpoint(
+            block, static_argnums=(2, 3))
+
+    def body(x, lp):
+        return block(x, lp, cfg, rules, positions), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = ll.rms_norm(x[:, cfg.n_meta_tokens:, :], params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return constrain(logits, rules, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    return {
+        "k": ("layers", "cache_batch", None, None, None),   # window cache: small
+        "v": ("layers", "cache_batch", None, None, None),
+        "slot_pos": (None,),
+        "ssd": ("layers", "cache_batch", None, "ssm_p", None),
+        "conv": ("layers", "cache_batch", None, "conv_ch"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Cache = meta block + ring window (attention) + SSD/conv states."""
+    L, K, dh = cfg.n_layers, cfg.n_kv_heads, cfg.dh
+    di = cfg.d_inner_ssm
+    Hs, N, P = cfg.n_ssm_heads, cfg.d_state, cfg.ssm_head_dim
+    Sc = cfg.n_meta_tokens + min(cfg.window, max_len)
+    return {
+        "k": jnp.zeros((L, batch, Sc, K, dh), dtype),
+        "v": jnp.zeros((L, batch, Sc, K, dh), dtype),
+        "slot_pos": jnp.full((Sc,), -1, jnp.int32),
+        "ssd": jnp.zeros((L, batch, Hs, P, N), jnp.float32),
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, di + 2 * G * N), dtype),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, rules, max_len: int):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = _with_meta(params, tokens, cfg, rules)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    cache = init_cache(cfg, B, max_len)
+    M, W = cfg.n_meta_tokens, cache["k"].shape[2] - cfg.n_meta_tokens
+
+    def body(x, lp):
+        h = ll.rms_norm(x, lp["ln1"])
+        a, (k, v) = ll.attention(h, lp["attn"], cfg, rules,
+                                 positions=positions, window=cfg.window,
+                                 prefix_len=M, return_kv=True)
+        s, conv_st, ssd_st = ssm_mod._mix(h, lp["ssm"], cfg, rules)
+        y = 0.5 * (ll.rms_norm(a, lp["norm_attn"]) +
+                   ll.rms_norm(s, lp["norm_ssm"]))
+        x = x + y
+        x = x + ll.swiglu(ll.rms_norm(x, lp["ln2"]), lp["ffn"], rules)
+        return x, (k.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+                   conv_st.astype(jnp.bfloat16), ssd_st.astype(jnp.float32))
+
+    x, (ks, vs, convs, ssds) = jax.lax.scan(body, x, params["layers"])
+
+    # Cache layout: [meta | ring window]. Fill meta slots + the window tail.
+    slot_pos = jnp.full((M + W,), -1, jnp.int32)
+    slot_pos = slot_pos.at[:M].set(jnp.arange(M))
+    tail = min(W, S - M)
+    tail_pos = jnp.arange(S - tail, S)
+    ring_slots = M + (tail_pos - M) % W
+    k_cache = cache["k"].at[:, :, :M].set(ks[:, :, :M])
+    v_cache = cache["v"].at[:, :, :M].set(vs[:, :, :M])
+    k_cache = k_cache.at[:, :, ring_slots].set(ks[:, :, tail_pos])
+    v_cache = v_cache.at[:, :, ring_slots].set(vs[:, :, tail_pos])
+    slot_pos = slot_pos.at[ring_slots].set(tail_pos)
+
+    x = ll.rms_norm(x[:, -1:, :], params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, {"k": k_cache, "v": v_cache, "slot_pos": slot_pos,
+                    "ssd": ssds, "conv": convs}
+
+
+def decode(params, cache, token, pos, cfg: ModelConfig,
+           rules: ShardingRules | None):
+    """pos counts INCLUDING the meta prefix (first real token is at
+    pos = n_meta_tokens + prompt_len)."""
+    x = params["embed"].astype(cfg.dtype)[token]
+    x = constrain(x, rules, "decode_batch", None, None)
+    M = cfg.n_meta_tokens
+    Sc = cache["k"].shape[2]
+    W = Sc - M
+    slot = M + (pos - M) % W
+    slot_pos = cache["slot_pos"].at[slot].set(pos)
+    # Keys valid if written, within window, or meta.
+    valid = (slot_pos >= 0) & (
+        (jnp.arange(Sc) < M) | (slot_pos > pos - cfg.window))
+
+    def body(x, inp):
+        lp, ck, cv, conv_st, ssd_st = inp
+        h = ll.rms_norm(x, lp["ln1"])
+        # attention against the ring cache
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"].astype(h.dtype))
+        k_new = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"].astype(h.dtype))
+        v_new = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"].astype(h.dtype))
+        cos, sin = ll.rotary(jnp.full((x.shape[0], 1), pos), cfg.dh,
+                             cfg.rope_theta)
+        q = ll.apply_rope(q, cos, sin)
+        k_new = ll.apply_rope(k_new, cos, sin)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, k_new.astype(ck.dtype), slot, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, v_new.astype(cv.dtype), slot, 1)
+        H, K = cfg.n_heads, cfg.n_kv_heads
+        qg = q.reshape(x.shape[0], 1, K, H // K, cfg.dh)
+        scores = jnp.einsum("bskgh,btkh->bkgst", qg, ck) / jnp.sqrt(1.0 * cfg.dh)
+        scores = jnp.where(valid[None, None, None, None, :], scores, ll.NEG_INF)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(h.dtype)
+        o = jnp.einsum("bkgst,btkh->bskgh", probs, cv)
+        a = jnp.einsum("bshk,hkd->bsd", o.reshape(x.shape[0], 1, H, cfg.dh),
+                       lp["attn"]["wo"].astype(h.dtype))
+        s, new_conv, new_ssd = ssm_mod._mix(
+            h, lp["ssm"], cfg, rules, conv_state=conv_st, ssd_state=ssd_st,
+            step=True)
+        y = 0.5 * (ll.rms_norm(a, lp["norm_attn"]) +
+                   ll.rms_norm(s, lp["norm_ssm"]))
+        x = x + y
+        x = x + ll.swiglu(ll.rms_norm(x, lp["ln2"]), lp["ffn"], rules)
+        return x, (ck, cv, new_conv, new_ssd)
+
+    x, (ks, vs, convs, ssds) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  cache["conv"], cache["ssd"]))
+    x = ll.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, {"k": ks, "v": vs, "slot_pos": slot_pos,
+                    "ssd": ssds, "conv": convs}

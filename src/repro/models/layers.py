@@ -1,0 +1,682 @@
+"""Shared pure-JAX building blocks for the model zoo.
+
+Conventions:
+  * params are nested dicts of f32 arrays; forward casts to cfg.dtype.
+  * every block takes a ``ShardingRules | None`` and annotates its
+    activations via ``constrain`` (no-op off-mesh) — model code never touches
+    mesh axes directly.
+  * decode paths operate on one new token against an explicit cache pytree.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "dense_init", "rms_norm", "rotary", "apply_rope",
+    "attention", "attention_decode", "swiglu", "moe_ffn",
+    "ssd", "ssd_step", "causal_conv1d", "conv1d_step",
+]
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0) -> jax.Array:
+    """Truncated-normal fan-in init (f32 master copy)."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis]))
+    std = 1.0 / np.sqrt(max(fan_in, 1))
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# norms / rotary
+# --------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rotary(positions, dh: int, theta: float):
+    """(..., S) int positions -> cos/sin of shape (..., S, dh//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, dh); cos/sin: (B, S, dh//2) or (S, dh//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    cos, sin = cos.astype(x.dtype), sin.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# attention (training / prefill path)
+# --------------------------------------------------------------------------
+
+FLASH_THRESHOLD = 8192   # use blockwise attention at/above this seq length
+BLOCK_Q = 512
+BLOCK_K = 1024
+
+
+def blockwise_attention(q, k, v, causal: bool, window: int, prefix_len: int,
+                        block_q: int = BLOCK_Q, block_k: int = BLOCK_K):
+    """Flash-style attention in pure JAX: O(S * block) memory, never
+    materializing the (Sq, Sk) score matrix.
+
+    Outer loop over query blocks is a python loop (so causal/window blocks
+    outside each query block's reach are STATICALLY skipped — the same
+    compute-skipping the Pallas kernel does on TPU); the inner loop over kv
+    blocks is a lax.scan carrying the online-softmax state (m, l, acc).
+
+    q: (B, Sq, K, g, dh) grouped queries; k/v: (B, Sk, K, dh).
+    Positions are the global indices 0..S-1 (rotary already applied).
+    Returns (B, Sq, K, g, dh).
+    """
+    B, Sq, K, g, dh = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / np.sqrt(dh)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    # Pad S to block multiples (masked out below).
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq = (Sq + pq) // bq
+    nk = (Sk + pk) // bk
+
+    out_blocks = []
+    for qi in range(nq):
+        q_blk = q[:, qi * bq:(qi + 1) * bq]               # (B,bq,K,g,dh)
+        q_lo, q_hi = qi * bq, qi * bq + bq - 1
+        # Statically-reachable kv blocks for this query block.
+        kv_ids = []
+        for ki in range(nk):
+            k_lo, k_hi = ki * bk, ki * bk + bk - 1
+            if causal and k_lo > q_hi:
+                continue  # entirely in the future
+            if window > 0 and k_hi < q_lo - window + 1 - bq \
+                    and not (prefix_len > 0 and k_lo < prefix_len):
+                continue  # entirely behind the window (and not meta prefix)
+            kv_ids.append(ki)
+        kv_ids = jnp.array(kv_ids, jnp.int32)
+
+        def inner(carry, ki):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * bk, bk, 1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * bk, bk, 1)
+            s = jnp.einsum("bqkgh,btkh->bkgqt", q_blk, k_blk) * scale
+            s = s.astype(jnp.float32)
+            q_pos = q_lo + jnp.arange(bq)
+            k_pos = ki * bk + jnp.arange(bk)
+            diff = q_pos[:, None] - k_pos[None, :]
+            bad = k_pos[None, :] >= Sk  # padding keys
+            if causal:
+                bad |= diff < 0
+            if window > 0:
+                oow = diff >= window
+                if prefix_len > 0:
+                    oow &= k_pos[None, :] >= prefix_len
+                bad |= oow
+            s = jnp.where(bad[None, None, None], NEG_INF, s)
+            m_new = jnp.maximum(m, s.max(-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqt,btkh->bkgqh", p.astype(q.dtype), v_blk)
+            acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, g, bq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, K, g, bq), jnp.float32)
+        a0 = jnp.zeros((B, K, g, bq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0), kv_ids)
+        blk = acc / jnp.maximum(l[..., None], 1e-30)
+        out_blocks.append(jnp.moveaxis(blk, 3, 1).astype(q.dtype))
+
+    out = jnp.concatenate(out_blocks, axis=1)  # (B, Sq+pq, K, g, dh)
+    if pq:
+        out = out[:, :Sq]
+    return out
+
+
+# --------------------------------------------------------------------------
+# flash attention with custom VJP (training path): the backward RECOMPUTES
+# the score blocks instead of letting autodiff save every (bq, bk)
+# probability tile — without this, jax saves O(S^2) residuals through the
+# kv scan and the blockwise forward buys nothing in training (§Perf).
+# --------------------------------------------------------------------------
+
+def _flash_fwd_blocks(q, k, v, causal, window, prefix, bq, bk):
+    """Returns (out, lse) with lse = m + log l per query (B, K, g, Sq)."""
+    B, Sq, K, g, dh = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / np.sqrt(dh)
+    nq = Sq // bq
+    outs, lses = [], []
+    for qi in range(nq):
+        q_blk = q[:, qi * bq:(qi + 1) * bq]
+        kv_ids = _reachable_kv(qi, bq, bk, Sk, causal, window, prefix)
+
+        def inner(carry, ki):
+            m, l, acc = carry
+            s, v_blk = _score_block(q_blk, k, v, ki, qi, bq, bk, Sk, scale,
+                                    causal, window, prefix)
+            m_new = jnp.maximum(m, s.max(-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqt,btkh->bkgqh", p.astype(q.dtype), v_blk)
+            return (m_new, l_new, acc * corr[..., None] + pv.astype(jnp.float32)), None
+
+        m0 = jnp.full((B, K, g, bq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, K, g, bq), jnp.float32)
+        a0 = jnp.zeros((B, K, g, bq, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0),
+                                      jnp.asarray(kv_ids, jnp.int32))
+        l = jnp.maximum(l, 1e-30)
+        outs.append(jnp.moveaxis(acc / l[..., None], 3, 1).astype(q.dtype))
+        lses.append(m + jnp.log(l))
+    return jnp.concatenate(outs, axis=1), jnp.concatenate(lses, axis=-1)
+
+
+def _reachable_kv(qi, bq, bk, Sk, causal, window, prefix) -> list[int]:
+    """STATIC list of kv-block ids this query block can attend to."""
+    nk = (Sk + bk - 1) // bk
+    q_lo, q_hi = qi * bq, qi * bq + bq - 1
+    ids = []
+    for ki in range(nk):
+        k_lo, k_hi = ki * bk, ki * bk + bk - 1
+        if causal and k_lo > q_hi:
+            continue
+        if window > 0 and k_hi < q_lo - window + 1 - bq \
+                and not (prefix > 0 and k_lo < prefix):
+            continue
+        ids.append(ki)
+    return ids
+
+
+def _score_block(q_blk, k, v, ki, qi, bq, bk, Sk, scale, causal, window,
+                 prefix):
+    k_blk = jax.lax.dynamic_slice_in_dim(k, ki * bk, bk, 1)
+    v_blk = jax.lax.dynamic_slice_in_dim(v, ki * bk, bk, 1)
+    s = jnp.einsum("bqkgh,btkh->bkgqt", q_blk, k_blk).astype(jnp.float32)
+    s = s * scale
+    q_pos = qi * bq + jnp.arange(bq)
+    k_pos = ki * bk + jnp.arange(bk)
+    diff = q_pos[:, None] - k_pos[None, :]
+    bad = k_pos[None, :] >= Sk
+    if causal:
+        bad |= diff < 0
+    if window > 0:
+        oow = diff >= window
+        if prefix > 0:
+            oow &= k_pos[None, :] >= prefix
+        bad |= oow
+    return jnp.where(bad[None, None, None], NEG_INF, s), v_blk
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_train(q, k, v, causal=True, window=0, prefix=0,
+                          bq=BLOCK_Q, bk=BLOCK_K):
+    """Blockwise attention, O(S*block) memory in fwd AND bwd.
+
+    q: (B, Sq, K, g, dh) grouped; k/v: (B, Sk, K, dh). Sq, Sk must be
+    multiples of bq, bk (attention() pads)."""
+    out, _ = _flash_fwd_blocks(q, k, v, causal, window, prefix, bq, bk)
+    return out
+
+
+def _flash_train_fwd(q, k, v, causal, window, prefix, bq, bk):
+    out, lse = _flash_fwd_blocks(q, k, v, causal, window, prefix, bq, bk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_train_bwd(causal, window, prefix, bq, bk, res, do):
+    q, k, v, out, lse = res
+    B, Sq, K, g, dh = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / np.sqrt(dh)
+    nq = Sq // bq
+    delta = jnp.einsum("bqkgh,bqkgh->bkgq", do.astype(jnp.float32),
+                       out.astype(jnp.float32))          # (B,K,g,Sq)
+    dq = jnp.zeros_like(q, dtype=jnp.float32)
+    dk = jnp.zeros_like(k, dtype=jnp.float32)
+    dv = jnp.zeros_like(v, dtype=jnp.float32)
+    for qi in range(nq):
+        sl = slice(qi * bq, (qi + 1) * bq)
+        q_blk = q[:, sl]
+        do_blk = do[:, sl].astype(jnp.float32)           # (B,bq,K,g,dh)
+        lse_blk = lse[..., sl]                           # (B,K,g,bq)
+        dl_blk = delta[..., sl]
+        kv_ids = _reachable_kv(qi, bq, bk, Sk, causal, window, prefix)
+
+        def inner(dq_acc, ki):
+            s, v_blk = _score_block(q_blk, k, v, ki, qi, bq, bk, Sk, scale,
+                                    causal, window, prefix)
+            p = jnp.exp(s - lse_blk[..., None])          # (B,K,g,bq,bk)
+            do_t = jnp.moveaxis(do_blk, 1, 3)            # (B,K,g,bq,dh)
+            dv_c = jnp.einsum("bkgqt,bkgqh->btkh", p, do_t)
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * bk, bk, 1)
+            dp = jnp.einsum("bkgqh,btkh->bkgqt", do_t,
+                            v_blk.astype(jnp.float32))
+            ds = p * (dp - dl_blk[..., None]) * scale
+            dq_c = jnp.einsum("bkgqt,btkh->bqkgh", ds,
+                              k_blk.astype(jnp.float32))
+            dk_c = jnp.einsum("bkgqt,bqkgh->btkh", ds,
+                              q_blk.astype(jnp.float32))
+            return dq_acc + dq_c, (ki, dk_c, dv_c)
+
+        dq_blk, (kis, dk_cs, dv_cs) = jax.lax.scan(
+            inner, jnp.zeros((B, bq, K, g, dh), jnp.float32),
+            jnp.asarray(kv_ids, jnp.int32))
+        dq = dq.at[:, sl].add(dq_blk)
+        # scatter-add per visited kv block (static id list per q block)
+        for j, ki in enumerate(kv_ids):
+            ksl = slice(ki * bk, ki * bk + bk)
+            dk = dk.at[:, ksl].add(dk_cs[j])
+            dv = dv.at[:, ksl].add(dv_cs[j])
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_train.defvjp(_flash_train_fwd, _flash_train_bwd)
+
+def _mask(q_pos, k_pos, causal: bool, window: int, prefix_len: int = 0):
+    """(..., Sq, Sk) additive mask from position grids.
+
+    ``prefix_len``: keys at positions < prefix_len stay visible even outside
+    the sliding window (Hymba meta tokens)."""
+    m = jnp.zeros(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]),
+                  jnp.float32)
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    if causal:
+        m = jnp.where(diff < 0, NEG_INF, m)
+    if window > 0:
+        out_of_window = diff >= window
+        if prefix_len > 0:
+            out_of_window &= k_pos[..., None, :] >= prefix_len
+        m = jnp.where(out_of_window, NEG_INF, m)
+    return m
+
+
+def attention(
+    x, p, cfg: ModelConfig, rules: ShardingRules | None,
+    positions=None, causal: bool = True, window: int | None = None,
+    kv_source=None, return_kv: bool = False, prefix_len: int = 0,
+):
+    """Batched multi-head attention with GQA + rotary.
+
+    ``kv_source``: cross-attention memory (B, Sk, D) — rotary is skipped and
+    causality ignored for cross attention. ``return_kv`` additionally returns
+    the (k, v) tensors for cache construction during prefill.
+    """
+    B, S, D = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    win = cfg.window if window is None else window
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    src = x if kv_source is None else kv_source
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+
+    if kv_source is None:
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        cos, sin = rotary(positions, dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        q_pos = k_pos = positions
+        use_causal = causal
+    else:
+        q_pos = jnp.arange(S)[None, :]
+        k_pos = jnp.arange(src.shape[1])[None, :]
+        use_causal, win = False, 0
+
+    q = constrain(q, rules, "batch", "seq", "heads", None)
+    k = constrain(k, rules, "batch", "seq", "kv_heads", None)
+    v = constrain(v, rules, "batch", "seq", "kv_heads", None)
+
+    g = H // K  # GQA group size
+    qg = q.reshape(B, S, K, g, dh)
+    if max(S, k.shape[1]) >= (cfg.flash_threshold or FLASH_THRESHOLD):
+        # Long sequences: flash-style blockwise attention — O(S*block)
+        # memory in forward AND backward (custom VJP recomputes score
+        # blocks). On TPU this path is the Pallas flash_attention kernel.
+        Sk = k.shape[1]
+        pq, pk = (-S) % BLOCK_Q, (-Sk) % BLOCK_K
+        qp = jnp.pad(qg, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0))) if pq else qg
+        kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+        vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+        out = flash_attention_train(qp, kp, vp, use_causal, win, prefix_len)
+        out = out[:, :S].reshape(B, S, H, dh)
+    else:
+        scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) / np.sqrt(dh)
+        mask = _mask(q_pos, k_pos, use_causal, win, prefix_len)  # (B, Sq, Sk)
+        scores = scores + mask[:, None, None, :, :].astype(scores.dtype)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+        out = jnp.einsum("bkgst,btkh->bskgh", probs, v).reshape(B, S, H, dh)
+    out = constrain(out, rules, "batch", "seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    y = constrain(y, rules, "batch", "seq", None)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def attention_decode(
+    x, p, cache_k, cache_v, pos, cfg: ModelConfig,
+    rules: ShardingRules | None, window: int | None = None,
+    cross: bool = False,
+):
+    """One-token decode against a cache.
+
+    x: (B, 1, D); cache_k/v: (B, S_max, K, dh); pos: scalar int (current
+    index). Returns (y, new_cache_k, new_cache_v). For ``cross=True`` the
+    cache holds encoder K/V and is not updated.
+    """
+    B, _, D = x.shape
+    H, K, dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    win = cfg.window if window is None else window
+    S_max = cache_k.shape[1]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if not cross:
+        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        if "bq" in p:
+            q = q + p["bq"].astype(x.dtype)
+            k_new = k_new + p["bk"].astype(x.dtype)
+            v_new = v_new + p["bv"].astype(x.dtype)
+        pos_arr = jnp.full((B, 1), pos)
+        cos, sin = rotary(pos_arr, dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+        # Ring-buffer slot for windowed layers, linear slot otherwise.
+        slot = pos % S_max if win > 0 else pos
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, 1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, 1)
+    elif "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+
+    g = H // K
+    qg = q.reshape(B, 1, K, g, dh)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, cache_k) / np.sqrt(dh)
+    # Valid-key mask: slots written so far (ring buffer ⇒ all slots once
+    # pos >= S_max), and within the window for windowed layers.
+    idx = jnp.arange(S_max)
+    if cross:
+        valid = jnp.ones((S_max,), bool)
+    elif win > 0:
+        valid = (idx <= pos) | (pos >= S_max)
+    else:
+        valid = idx <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, cache_v).reshape(B, 1, H, dh)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def swiglu(x, p, rules: ShardingRules | None):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(h) * u
+    h = constrain(h, rules, "batch", "seq", "d_ff")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    return constrain(y, rules, "batch", "seq", None)
+
+
+def _expert_swiglu(buf, p, rules, grouped: bool = False):
+    """buf: (E, C, D) or (G, E, C, D) routed-token buffers; per-expert
+    SwiGLU."""
+    if grouped:
+        h = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(buf.dtype))
+        u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(buf.dtype))
+        h = jax.nn.silu(h) * u
+        h = constrain(h, rules, "batch", "experts", None, None)
+        return jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(buf.dtype))
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(buf.dtype))
+    h = jax.nn.silu(h) * u
+    h = constrain(h, rules, "experts", None, None)
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(buf.dtype))
+
+
+def moe_ffn(x, p, cfg: ModelConfig, rules: ShardingRules | None):
+    """Fine-grained routed MoE with capacity dropping (sort-based dispatch).
+
+    TPU-idiomatic: token->expert routing is an argsort + scatter/gather
+    (O(T k D) bytes), NOT the quadratic one-hot dispatch einsum; experts are
+    sharded over the model axis (EP) so the expert buffers lower to an
+    all-to-all under GSPMD.
+
+    ``cfg.moe_groups > 1`` splits the token axis into data-local groups and
+    dispatches within each: routing indices then never cross the data
+    shards, so the gathers/scatters stay local and only the (G, E, cap, D)
+    expert buffers travel — the grouped-dispatch §Perf optimization.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = max(1, min(cfg.moe_groups, T))
+    Tg = T // G
+    xt = x.reshape(G, Tg, D)
+    xt = constrain(xt, rules, "batch", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                      # (G, Tg, k)
+    gate = (gate / jnp.sum(gate, -1, keepdims=True)).astype(x.dtype)
+
+    cap = int(np.ceil(Tg * k / E * cfg.capacity_factor))
+    flat_e = eidx.reshape(G, Tg * k)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), k)[None], (G, Tg * k))
+    flat_g = gate.reshape(G, Tg * k)
+    order = jnp.argsort(flat_e, axis=1)
+    se = jnp.take_along_axis(flat_e, order, 1)
+    st = jnp.take_along_axis(flat_t, order, 1)
+    sg = jnp.take_along_axis(flat_g, order, 1)
+    # position within expert = rank - start offset of the expert's run
+    counts = jnp.sum(jax.nn.one_hot(se, E, dtype=jnp.int32), axis=1)  # (G, E)
+    starts = jnp.concatenate(
+        [jnp.zeros((G, 1), jnp.int32), jnp.cumsum(counts, 1)[:, :-1]], 1)
+    slot = jnp.arange(Tg * k)[None, :] - jnp.take_along_axis(starts, se, 1)
+    keep = slot < cap
+    slot_c = jnp.clip(slot, 0, cap - 1)
+
+    def dispatch_combine(xt_l, se_l, st_l, sg_l, keep_l, slot_l, experts):
+        """Group-local dispatch -> expert SwiGLU -> combine. Under
+        shard_map the gathers/scatters are purely local (GSPMD otherwise
+        replicates the (G, Tg*k, D) gather outputs — tens of GB/device at
+        32k prefill; see §Perf)."""
+        Gl = xt_l.shape[0]
+        gi = jnp.arange(Gl)[:, None]
+        picked = xt_l[gi, st_l].astype(x.dtype)
+        buf = jnp.zeros((Gl, E, cap, D), x.dtype)
+        buf = buf.at[gi, se_l, slot_l].add(
+            jnp.where(keep_l[..., None], picked, 0).astype(x.dtype))
+        buf = constrain(buf, rules, "batch", "experts", None, None)
+        out_buf = _expert_swiglu(buf, experts, rules, grouped=True)
+        contrib = out_buf[gi, se_l, slot_l].astype(x.dtype)
+        yt = jnp.zeros((Gl, Tg, D), x.dtype)
+        yt = yt.at[gi, st_l].add(contrib * (sg_l * keep_l)[..., None])
+        return yt
+
+    batch_axes = tuple(a for a in ("pod", "data")
+                       if rules is not None and a in rules.mesh_axes)
+    if G > 1 and batch_axes:
+        from jax.sharding import PartitionSpec as _P
+        gspec = _P(batch_axes if len(batch_axes) > 1 else batch_axes[0])
+        rep = _P()
+        yt = jax.shard_map(
+            dispatch_combine,
+            in_specs=(gspec, gspec, gspec, gspec, gspec, gspec, rep),
+            out_specs=gspec,
+            axis_names=set(batch_axes), check_vma=False,
+        )(xt, se, st, sg, keep, slot_c, p["experts"])
+    else:
+        yt = dispatch_combine(xt, se, st, sg, keep, slot_c, p["experts"])
+    y = yt.reshape(B, S, D)
+
+    if cfg.n_shared_experts > 0:
+        y = y + swiglu(x, p["shared"], rules)
+    # Load-balance auxiliary loss (Switch-style), returned for the trainer.
+    me = jnp.mean(jax.nn.one_hot(eidx, E).sum(axis=2),
+                  axis=(0, 1))                                # tokens/expert
+    pe = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(me / k * pe)
+    return constrain(y, rules, "batch", "seq", None), aux
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 SSD (chunked reference; the Pallas kernel mirrors this math)
+# --------------------------------------------------------------------------
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q) lower-tri cumulative sums (exclusive)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd(x, dt, A, B_, C_, chunk: int, rules: ShardingRules | None = None,
+        init_state=None):
+    """Chunked state-space-duality scan (Mamba-2 Alg. 1, jnp reference).
+
+    x:  (B, S, H, P)   per-head inputs
+    dt: (B, S, H)      softplus-activated step sizes
+    A:  (H,)           negative decay rates
+    B_: (B, S, G, N)   input projections   (G groups broadcast over H)
+    C_: (B, S, G, N)   output projections
+    Returns (y, final_state) with y (B, S, H, P), state (B, H, P, N).
+    """
+    Bb, S, H, Pd = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    pad = (-S) % chunk
+    if pad:
+        # dt = 0 padding is exact: decay exp(0)=1, update B*(dt*x)=0.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_pad = S + pad
+    nc = S_pad // chunk
+    rep = H // G
+
+    xr = x.reshape(Bb, nc, chunk, H, Pd)
+    dtr = dt.reshape(Bb, nc, chunk, H)
+    Br = B_.reshape(Bb, nc, chunk, G, N)
+    Cr = C_.reshape(Bb, nc, chunk, G, N)
+    del S_pad
+    Br = jnp.repeat(Br, rep, axis=3)          # (B, nc, Q, H, N)
+    Cr = jnp.repeat(Cr, rep, axis=3)
+
+    xdt = xr * dtr[..., None]                 # dt-weighted inputs
+    Adt = A[None, None, None, :] * dtr        # (B, nc, Q, H)
+    Adt_t = jnp.moveaxis(Adt, -1, 2)          # (B, nc, H, Q)
+
+    # Intra-chunk (diagonal block): Y_d = (C B^T ⊙ L) X
+    L = jnp.exp(_segsum(Adt_t))               # (B, nc, H, Q, Q)
+    CB = jnp.einsum("bclhn,bcshn->bchls", Cr, Br)
+    Yd = jnp.einsum("bchls,bcshp->bclhp", CB * L, xdt)
+
+    # Chunk-final states: S_c = sum_s exp(A_cum_end - A_cum_s) B_s x_s^T
+    Acum = jnp.cumsum(Adt_t, axis=-1)          # (B, nc, H, Q)
+    decay_states = jnp.exp(Acum[..., -1:] - Acum)            # (B, nc, H, Q)
+    states = jnp.einsum("bchs,bcshn,bcshp->bchpn",
+                        decay_states, Br, xdt)               # (B, nc, H, P, N)
+
+    # Inter-chunk recurrence (sequential over chunks).
+    chunk_decay = jnp.exp(Acum[..., -1])       # (B, nc, H)
+    if init_state is None:
+        init_state = jnp.zeros((Bb, H, Pd, N), x.dtype)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None].astype(carry.dtype) + st
+        return new, carry  # emit the state ENTERING this chunk
+
+    xs = (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    final, entered = jax.lax.scan(step, init_state.astype(states.dtype), xs)
+    entered = jnp.moveaxis(entered, 0, 1)      # (B, nc, H, P, N)
+
+    # Off-diagonal contribution: Y_off = C_s exp(A_cum_s) S_entered
+    state_decay = jnp.exp(Acum)                # (B, nc, H, Q)
+    Yoff = jnp.einsum("bclhn,bchpn,bchl->bclhp", Cr, entered, state_decay)
+
+    y = (Yd + Yoff).reshape(Bb, S + pad, H, Pd)
+    if pad:
+        y = y[:, :S]
+    return y, final
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token SSD recurrence for decode.
+
+    state: (B, H, P, N); x_t: (B, H, P); dt_t: (B, H); B_t/C_t: (B, G, N).
+    """
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    B_h = jnp.repeat(B_t, rep, axis=1)        # (B, H, N)
+    C_h = jnp.repeat(C_t, rep, axis=1)
+    decay = jnp.exp(A[None, :] * dt_t)        # (B, H)
+    upd = jnp.einsum("bhp,bhn->bhpn", x_t * dt_t[..., None], B_h)
+    new_state = state * decay[:, :, None, None].astype(state.dtype) + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, C_h)
+    return y, new_state
+
+
+# --------------------------------------------------------------------------
+# causal depthwise conv (Mamba front conv)
+# --------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b):
+    """x: (B, S, C), w: (K, C) depthwise, left-padded causal."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return out + b[None, None, :]
+
+
+def conv1d_step(conv_state, x_t, w, b):
+    """conv_state: (B, K-1, C) last inputs; x_t: (B, C)."""
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", full, w) + b[None, :]
+    return y, full[:, 1:, :]

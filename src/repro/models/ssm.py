@@ -1,0 +1,210 @@
+"""Mamba-2 (SSD) attention-free stack — mamba2-2.7b.
+
+Per-layer: in_proj -> (z | xBC | dt); causal depthwise conv over xBC; SSD
+chunked scan (state-space duality — the quadratic intra-chunk term runs on
+the MXU, the inter-chunk recurrence is a cheap sequential scan); gated
+output norm; out_proj. Decode carries (ssd_state, conv_state) — O(1) per
+token regardless of context length, which is why this family serves the
+``long_500k`` cell the dense-attention archs must skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules, constrain
+from repro.models import layers as ll
+from repro.models.config import ModelConfig
+
+__all__ = ["init", "axes", "forward", "prefill", "decode", "init_cache"]
+
+G = 1  # SSD groups (mamba2 default ngroups=1)
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner_ssm
+    H = cfg.n_ssm_heads
+    N = cfg.d_state
+    P = cfg.ssm_head_dim
+    conv_ch = di + 2 * G * N
+    return di, H, N, P, conv_ch
+
+
+def init(cfg: ModelConfig, key) -> dict:
+    D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    di, H, N, P, conv_ch = _dims(cfg)
+    kd, kl, kh = jax.random.split(key, 3)
+
+    def one_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln": jnp.ones((D,), jnp.float32),
+            "in_proj": ll.dense_init(k1, (D, 2 * di + 2 * G * N + H)),
+            "conv_w": 0.1 * jax.random.normal(k2, (cfg.ssm_conv, conv_ch),
+                                              jnp.float32),
+            "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+            "D_skip": jnp.ones((H,), jnp.float32),
+            "dt_bias": jnp.zeros((H,), jnp.float32),
+            "out_norm": jnp.ones((di,), jnp.float32),
+            "out_proj": ll.dense_init(k3, (di, D)),
+        }
+
+    outs = [one_layer(k) for k in jax.random.split(kl, L)]
+    params = {
+        "embed": ll.dense_init(kd, (V, D), in_axis=1),
+        "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *outs),
+        "final_norm": jnp.ones((D,), jnp.float32),
+        "lm_head": ll.dense_init(kh, (D, V)),
+    }
+    return params
+
+
+def axes(cfg: ModelConfig) -> dict:
+    return {
+        "embed": ("vocab", "fsdp"),
+        "final_norm": (None,),
+        "lm_head": ("fsdp", "vocab"),
+        "layers": {
+            "ln": ("layers", None),
+            "in_proj": ("layers", "fsdp", "d_ff"),     # wide dim TP-sharded
+            "conv_w": ("layers", None, "d_ff"),
+            "conv_b": ("layers", "d_ff"),
+            "A_log": ("layers", None),
+            "D_skip": ("layers", None),
+            "dt_bias": ("layers", None),
+            "out_norm": ("layers", "d_ff"),
+            "out_proj": ("layers", "d_ff", "fsdp"),
+        },
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    di, H, N, P, _ = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * G * N]
+    dt_raw = zxbcdt[..., -H:]
+    return z, xbc, dt_raw
+
+
+def _mix(x, lp, cfg: ModelConfig, rules, conv_state=None, ssd_state=None,
+         step: bool = False):
+    """The SSD mixer. Training path (step=False) takes (B, S, D); decode
+    path takes (B, 1, D) plus the carried states."""
+    di, H, N, P, conv_ch = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, lp["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         lp["dt_bias"].astype(jnp.float32))
+
+    if not step:
+        xbc_conv = jax.nn.silu(ll.causal_conv1d(
+            xbc, lp["conv_w"].astype(x.dtype), lp["conv_b"].astype(x.dtype)))
+        xin = xbc_conv[..., :di]
+        B_ = xbc_conv[..., di:di + G * N].reshape(*x.shape[:2], G, N)
+        C_ = xbc_conv[..., di + G * N:].reshape(*x.shape[:2], G, N)
+        Bt, S = x.shape[0], x.shape[1]
+        xh = xin.reshape(Bt, S, H, P)
+        xh = constrain(xh, rules, "batch", "seq", "d_ff", None)
+        y, final = ll.ssd(xh, dt.astype(jnp.float32), A,
+                          B_.astype(jnp.float32), C_.astype(jnp.float32),
+                          cfg.ssm_chunk, rules, init_state=ssd_state)
+        y = y.astype(x.dtype) + lp["D_skip"].astype(x.dtype)[None, None, :, None] * xh
+        y = y.reshape(Bt, S, di)
+        new_conv = xbc[:, -(cfg.ssm_conv - 1):, :]
+    else:
+        xbc_t, new_conv = ll.conv1d_step(
+            conv_state, xbc[:, 0, :].astype(conv_state.dtype),
+            lp["conv_w"].astype(conv_state.dtype),
+            lp["conv_b"].astype(conv_state.dtype))
+        xbc_t = jax.nn.silu(xbc_t.astype(x.dtype))
+        xin = xbc_t[..., :di]
+        B_ = xbc_t[..., di:di + G * N].reshape(-1, G, N)
+        C_ = xbc_t[..., di + G * N:].reshape(-1, G, N)
+        xh = xin.reshape(-1, H, P)
+        yt, final = ll.ssd_step(ssd_state, xh.astype(jnp.float32),
+                                dt[:, 0].astype(jnp.float32), A,
+                                B_.astype(jnp.float32), C_.astype(jnp.float32))
+        y = yt.astype(x.dtype) + lp["D_skip"].astype(x.dtype)[None, :, None] * xh
+        y = y.reshape(-1, 1, di)
+
+    y = y * jax.nn.silu(z if not step else z)
+    y = ll.rms_norm(y, lp["out_norm"])
+    out = jnp.einsum("bse,ed->bsd", y, lp["out_proj"].astype(x.dtype))
+    return constrain(out, rules, "batch", "seq", None), new_conv, final
+
+
+def _block(x, lp, cfg, rules):
+    y, _, _ = _mix(ll.rms_norm(x, lp["ln"]), lp, cfg, rules)
+    return x + y
+
+
+def forward(params, batch, cfg: ModelConfig, rules: ShardingRules | None):
+    tokens = batch["tokens"]
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = constrain(x, rules, "batch", "seq", None)
+    block = _block
+    if cfg.remat:
+        block = jax.checkpoint(
+            block, static_argnums=(2, 3))
+
+    def body(x, lp):
+        return block(x, lp, cfg, rules), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = ll.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return constrain(logits, rules, "batch", "seq", "vocab"), jnp.zeros((), jnp.float32)
+
+
+def cache_axes(cfg: ModelConfig) -> dict:
+    return {
+        "ssd": ("layers", "cache_batch", None, "ssm_p", None),
+        "conv": ("layers", "cache_batch", None, "conv_ch"),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    di, H, N, P, conv_ch = _dims(cfg)
+    L = cfg.n_layers
+    return {
+        "ssd": jnp.zeros((L, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def prefill(params, batch, cfg: ModelConfig, rules, max_len: int):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = constrain(x, rules, "batch", "seq", None)
+
+    def body(x, lp):
+        y, conv_st, ssd_st = _mix(ll.rms_norm(x, lp["ln"]), lp, cfg, rules)
+        return x + y, (conv_st.astype(cfg.dtype), ssd_st.astype(jnp.float32))
+
+    x, (convs, ssds) = jax.lax.scan(body, x, params["layers"])
+    x = ll.rms_norm(x[:, -1:, :], params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, {"ssd": ssds, "conv": convs}
+
+
+def decode(params, cache, token, pos, cfg: ModelConfig,
+           rules: ShardingRules | None):
+    x = params["embed"].astype(cfg.dtype)[token]
+    x = constrain(x, rules, "decode_batch", None, None)
+
+    def body(x, inp):
+        lp, conv_st, ssd_st = inp
+        y, new_conv, new_ssd = _mix(
+            ll.rms_norm(x, lp["ln"]), lp, cfg, rules,
+            conv_state=conv_st, ssd_state=ssd_st, step=True)
+        return x + y, (new_conv, new_ssd)
+
+    x, (convs, ssds) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["ssd"]))
+    x = ll.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits, {"ssd": ssds, "conv": convs}

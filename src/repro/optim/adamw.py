@@ -1,0 +1,71 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Optimizer state mirrors the param tree (m, v in f32) and inherits the
+parameters' sharding (ZeRO-style: fsdp-sharded params => fsdp-sharded
+moments; no extra annotation needed under GSPMD).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "OptState"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[jax.Array], jax.Array] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> OptState:
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
+
+    def update(self, grads, state: OptState, params):
+        """Returns (new_params, new_state, grad_norm)."""
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1 - self.b1) * g
+            v = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mh = m / c1
+            vh = v / c2
+            new_p = p - lr * (mh / (jnp.sqrt(vh) + self.eps)
+                              + self.weight_decay * p)
+            return new_p.astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, OptState(step=step, m=new_m, v=new_v), gnorm

@@ -1,0 +1,7 @@
+from repro.sched.fleet import FleetSpec, estimate_stage_seconds
+from repro.sched.jobs import training_job_dag
+from repro.sched.orchestrator import FleetOrchestrator
+from repro.sched.straggler import StragglerDetector
+
+__all__ = ["FleetSpec", "estimate_stage_seconds", "training_job_dag",
+           "FleetOrchestrator", "StragglerDetector"]

@@ -1,0 +1,115 @@
+"""Property tests (hypothesis) for the core invariants: Dealloc optimality,
+closed-form simulator == slot-stepping oracle, transform feasibility,
+batch Greedy == sequential Greedy."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SpotMarket,
+    chain_from_arrays,
+    expected_spot_work,
+    generate_dag_jobs,
+    run_greedy,
+    transform,
+    window_sizes,
+)
+from repro.core.oracle import oracle_greedy_chain, oracle_task
+from repro.core.simulate import simulate_tasks
+
+MARKET = SpotMarket(250.0, seed=42)
+
+chain_strategy = st.builds(
+    lambda zs, ds, slack: (zs, ds, slack),
+    st.lists(st.floats(0.1, 30.0), min_size=1, max_size=8),
+    st.lists(st.sampled_from([1.0, 2.0, 8.0, 64.0]), min_size=8, max_size=8),
+    st.floats(0.0, 20.0),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(chain_strategy, st.floats(0.05, 0.95))
+def test_dealloc_optimal_vs_random_splits(args, beta):
+    zs, ds, slack = args
+    ds = ds[:len(zs)]
+    job = chain_from_arrays(0.0, sum(z / d for z, d in zip(zs, ds)) + slack,
+                            zs, ds)
+    sizes = window_sizes(job, beta)
+    # feasibility: every window >= e_i, total == window
+    e = job.e_array()
+    assert np.all(sizes >= e - 1e-9)
+    assert abs(sizes.sum() - job.window) < 1e-6
+    zo_opt = expected_spot_work(job.z_array(), job.delta_array(), sizes,
+                                beta).sum()
+    rng = np.random.default_rng(int(beta * 1e6) % 2**31)
+    for _ in range(20):
+        w = rng.dirichlet(np.ones(job.l)) * job.slack
+        zo = expected_spot_work(job.z_array(), job.delta_array(), e + w,
+                                beta).sum()
+        assert zo <= zo_opt + 1e-6
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    st.floats(0.0, 150.0),     # start
+    st.floats(0.05, 40.0),     # window size
+    st.floats(0.0, 1.0),       # load fraction
+    st.sampled_from([1.0, 2.0, 8.0, 64.0]),
+    st.sampled_from([0.18, 0.21, 0.24, 0.27, 0.30]),
+)
+def test_simulator_matches_oracle(start, size, frac, delta, bid):
+    end = start + size
+    z = frac * delta * size
+    sim = simulate_tasks(MARKET.view(bid), np.array([start]), np.array([end]),
+                         np.array([z]), np.array([delta]))
+    orc = oracle_task(MARKET, bid, start, end, z, delta)
+    assert abs(sim.spot_cost[0] - orc["spot_cost"]) < 1e-8
+    assert abs(sim.ondemand_cost[0] - orc["ondemand_cost"]) < 1e-8
+    assert abs(sim.spot_work[0] - orc["spot_work"]) < 1e-8
+    assert abs(sim.finish[0] - orc["finish"]) < 1e-8
+    # invariants
+    assert sim.spot_work[0] + sim.ondemand_work[0] <= z + 1e-9
+    assert sim.finish[0] <= end + 1e-9
+    if np.isfinite(sim.turning[0]):
+        assert sim.ondemand_work[0] > -1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_transform_preserves_work_and_critical_path(seed):
+    job = generate_dag_jobs(1, job_type=2, seed=seed)[0]
+    chain = transform(job)
+    assert abs(chain.total_work - job.total_work) < 1e-6 * job.total_work
+    # chain critical path == pseudo-schedule makespan == DAG critical path
+    assert abs(chain.min_makespan - job.critical_path) < 1e-8
+    assert chain.feasible()
+    # parallelism bounds: each pseudo-task's delta <= total DAG parallelism
+    assert max(t.delta for t in chain.tasks) <= sum(
+        t.delta for t in job.tasks) + 1e-9
+
+
+def test_batch_greedy_equals_oracle_greedy():
+    from repro.core import generate_chain_jobs
+    jobs = generate_chain_jobs(60, job_type=1, seed=5)
+    m = SpotMarket(max(j.deadline for j in jobs) + 1, seed=6)
+    for bid in (0.18, 0.30):
+        batch = run_greedy(jobs, bid, m, batch=True)
+        for ji, job in enumerate(jobs):
+            orc = oracle_greedy_chain(m, bid, job.arrival, job.deadline,
+                                      job.z_array(), job.delta_array())
+            assert abs(batch.spot_cost[ji] - orc["spot_cost"]) < 1e-6
+            assert abs(batch.ondemand_cost[ji] - orc["ondemand_cost"]) < 1e-6
+
+
+def test_market_invariants():
+    m = SpotMarket(50.0, seed=7)
+    assert np.all(m.price >= 0.12 - 1e-12) and np.all(m.price <= 1.0 + 1e-12)
+    betas = [m.beta_realized(b) for b in (0.18, 0.21, 0.24, 0.27, 0.30)]
+    assert all(b2 >= b1 for b1, b2 in zip(betas, betas[1:]))  # monotone
+    v = m.view(0.24)
+    t = np.linspace(0, 49, 300)
+    np.testing.assert_allclose(v.A(t) + v.H(t), t, atol=1e-9)
+    # inverse queries are true inverses on the availability support
+    targets = np.linspace(0, v.A(np.array([49.0]))[0] - 1e-6, 50)
+    tt = v.t_for_A(targets)
+    np.testing.assert_allclose(v.A(tt), targets, atol=1e-9)

@@ -1,0 +1,76 @@
+"""Deliverable guard: the dry-run cache must cover every (arch x shape x
+mesh) cell — 40 cells per mesh, with exactly the sub-quadratic skip rules —
+and every compiled cell must carry the three roofline terms."""
+
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, supports
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                     "roofline_cache.json")
+
+
+@pytest.fixture(scope="module")
+def cache():
+    if not os.path.exists(CACHE):
+        pytest.skip("dry-run cache absent — run repro.launch.dryrun --all")
+    with open(CACHE) as f:
+        return json.load(f)
+
+
+def test_all_80_base_cells_present_and_green(cache):
+    base = {(r["arch"], r["shape"], r["multi_pod"]): r
+            for r in cache if r.get("variant") == "base"}
+    missing, wrong = [], []
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok_expected, _ = supports(cfg, shape)
+            for mp in (False, True):
+                r = base.get((arch, shape, mp))
+                if r is None:
+                    missing.append((arch, shape, mp))
+                    continue
+                want = "ok" if ok_expected else "skipped"
+                if r["status"] != want:
+                    wrong.append((arch, shape, mp, r["status"], want))
+    assert not missing, f"missing cells: {missing}"
+    assert not wrong, f"wrong status: {wrong}"
+
+
+def test_compiled_cells_have_roofline_terms(cache):
+    for r in cache:
+        if r.get("status") != "ok":
+            continue
+        assert r["hlo_flops"] > 0, r["arch"]
+        assert r["hlo_bytes"] > 0, r["arch"]
+        assert r["compute_s"] > 0 and r["memory_s"] > 0
+        assert r["bottleneck"] in ("compute_s", "memory_s", "collective_s")
+        assert 0 < r["useful_flops_ratio"] <= 1.5, (
+            r["arch"], r["shape"], r["useful_flops_ratio"])
+        assert r["bytes_per_device"]["peak"] > 0
+
+
+def test_skip_rules_only_full_attention_long_context(cache):
+    for r in cache:
+        if r.get("status") == "skipped":
+            assert r["shape"] == "long_500k"
+            assert get_config(r["arch"]).kind not in ("ssm", "hybrid")
+
+
+def test_perf_cells_fit_hbm_after_optimization(cache):
+    """The §Perf endpoints: optimized variants of the three hillclimb cells
+    fit the 16 GiB v5e HBM."""
+    want = [("qwen2_5_32b", "train_4k", False, "flash_accum16"),
+            ("olmoe_1b_7b", "prefill_32k", False, "moe_grouped"),
+            ("deepseek_moe_16b", "train_4k", False, "moe_grouped"),
+            ("llama3_8b", "train_4k", False, "accum8")]
+    recs = {(r["arch"], r["shape"], r["multi_pod"], r.get("variant")): r
+            for r in cache}
+    for key in want:
+        r = recs.get(key)
+        assert r is not None and r["status"] == "ok", key
+        assert r["fits_hbm"], key

@@ -1,0 +1,69 @@
+"""Unit tests for the HLO roofline analyzer on synthetic module text."""
+
+from repro.launch.hlo_analysis import analyze
+
+MODULE = """HloModule jit_step, is_scheduled=true
+
+%fused_computation.1 (p0: f32[8,16], p1: f32[16,4]) -> f32[8,4] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %p1 = f32[16,4]{1,0} parameter(1)
+  ROOT %dot.9 = f32[8,4]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%body.2 (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg = (s32[], f32[8,16]{1,0}) parameter(0)
+  %gte0 = s32[] get-tuple-element(%arg), index=0
+  %gte1 = f32[8,16]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%gte1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %all-reduce.1 = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups={{0,1}}, to_apply=%add.1
+  ROOT %tuple = (s32[], f32[8,16]{1,0}) tuple(%gte0, %all-reduce.1)
+}
+
+%cond.3 (arg: (s32[], f32[8,16])) -> pred[] {
+  %arg = (s32[], f32[8,16]{1,0}) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %add = f32[] add(%a, %b)
+}
+
+ENTRY %main.1 (x: f32[8,16], w1: f32[16,4]) -> f32[8,4] {
+  %x = f32[8,16]{1,0} parameter(0)
+  %w1 = f32[16,4]{1,0} parameter(1)
+  %t = (s32[], f32[8,16]{1,0}) tuple(%x)
+  %while.1 = (s32[], f32[8,16]{1,0}) while(%t), condition=%cond.3, body=%body.2, backend_config={"known_trip_count":{"n":"5"}}
+  %gte = f32[8,16]{1,0} get-tuple-element(%while.1), index=1
+  ROOT %fusion.1 = f32[8,4]{1,0} fusion(%gte, %w1), kind=kOutput, calls=%fused_computation.1
+}
+"""
+
+
+def test_trip_count_multiplies_loop_body():
+    res = analyze(MODULE)
+    # body dot: 2*8*16*16 = 4096 flops, x5 trips; fusion dot: 2*8*4*16 = 1024
+    assert res["flops"] == 5 * 4096 + 1024
+
+
+def test_collectives_resolved_via_symtab_and_multiplied():
+    res = analyze(MODULE)
+    # all-reduce operand f32[8,16] = 512 B, x5 trips
+    assert res["collectives"]["all-reduce"] == 5 * 512
+    assert res["collectives"]["total"] == 5 * 512
+
+
+def test_fusion_internal_ops_do_not_count_bytes():
+    res = analyze(MODULE)
+    # bytes: body dot (512 out + 512 gte1 + 1024 w) + all-reduce(512+512) x5
+    # + entry fusion (128 out + 512 + 256 operands). The fused dot itself
+    # must NOT be double counted.
+    body_per_iter = (512 + 512 + 1024) + (512 + 512)
+    entry = 128 + 512 + 256
+    assert res["bytes"] == 5 * body_per_iter + entry
+
+
+def test_warnings_empty_for_wellformed_module():
+    assert analyze(MODULE)["warnings"] == []

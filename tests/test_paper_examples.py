@@ -1,0 +1,117 @@
+"""The paper's own worked examples and propositions as unit tests."""
+
+import numpy as np
+import pytest
+
+from repro.core import chain_from_arrays, expected_spot_work, window_sizes
+from repro.core.policy import (
+    f_selfowned,
+    selfowned_allocation,
+    spot_ondemand_split,
+    turning_point_expected,
+)
+
+
+class TestFig3Fig4Example:
+    """Section 4.1.1 example: l=4, z=(1.5,.5,2.5,.5), delta=(2,1,3,1),
+    beta=0.5, window [0,4] -> optimal spot workload 22/6 with window sizes
+    (4/3, 1/2, 5/3, 1/2)."""
+
+    def setup_method(self):
+        self.job = chain_from_arrays(0.0, 4.0, [1.5, 0.5, 2.5, 0.5],
+                                     [2, 1, 3, 1])
+
+    def test_optimal_window_sizes(self):
+        sizes = window_sizes(self.job, 0.5)
+        np.testing.assert_allclose(sizes, [4 / 3, 0.5, 5 / 3, 0.5], atol=1e-12)
+
+    def test_optimal_spot_work_is_22_over_6(self):
+        sizes = window_sizes(self.job, 0.5)
+        zo = expected_spot_work(self.job.z_array(), self.job.delta_array(),
+                                sizes, 0.5)
+        assert abs(zo.sum() - 22 / 6) < 1e-12
+
+    def test_paper_naive_allocation_gets_2(self):
+        """The artificial allocation s_i = i yields only 2 units on spot."""
+        sizes = np.ones(4)
+        zo = expected_spot_work(self.job.z_array(), self.job.delta_array(),
+                                sizes, 0.5)
+        assert abs(zo.sum() - 2.0) < 1e-12
+
+    def test_dealloc_beats_any_random_split(self):
+        rng = np.random.default_rng(0)
+        sizes_opt = window_sizes(self.job, 0.5)
+        zo_opt = expected_spot_work(self.job.z_array(),
+                                    self.job.delta_array(), sizes_opt, 0.5).sum()
+        e = self.job.e_array()
+        slack = self.job.slack
+        for _ in range(200):
+            w = rng.dirichlet(np.ones(4)) * slack
+            zo = expected_spot_work(self.job.z_array(),
+                                    self.job.delta_array(), e + w, 0.5).sum()
+            assert zo <= zo_opt + 1e-9
+
+
+class TestDefinition32Example:
+    """Section 3.3.1 toy: delta=3, window [0,2], r=1, beta=0.5 =>
+    z=3.5 -> no turning point; z=5.5 -> turning point at t=1."""
+
+    def test_no_turning_point(self):
+        # z_tilde = 3.5 - 1*2 = 1.5; d_eff = 2; expected finish: spot+od
+        # process at rate 0.5*1 + 1 = 1.5/unit -> done at t=1.
+        split = spot_ondemand_split(z=1.5, delta=2, size=2.0, beta=0.5)
+        # 1.5/2 = 0.75 = e; e/beta = 1.5 < 2 -> spot alone expected.
+        assert split.turning is None and split.s == 2
+
+    def test_turning_point_at_1(self):
+        # z_tilde = 5.5 - 2 = 3.5, d_eff = 2, window 2: e = 1.75,
+        # e/beta = 3.5 > 2 -> two phases; expected turning:
+        # tau = (2*2 - 3.5) / (2 * 0.5) = 0.5 with all-spot phase 1
+        # (the paper's mixed o=s=1 example reaches state z(1)=2 at t=1;
+        # the OPTIMAL composition turns at tau=(size*d - z)/(d*(1-beta))).
+        tau = turning_point_expected(z=3.5, delta=2, size=2.0, beta=0.5)
+        assert abs(tau - 0.5) < 1e-12
+
+
+class TestProp41Cases:
+    def test_spot_alone_iff_window_geq_e_over_beta(self):
+        s = spot_ondemand_split(z=4.0, delta=2.0, size=4.0, beta=0.5)
+        assert s.phase2 is False  # size = e/beta exactly
+        s = spot_ondemand_split(z=4.0, delta=2.0, size=3.9, beta=0.5)
+        assert s.phase2 is True and s.s == 2.0
+        s = spot_ondemand_split(z=4.0, delta=2.0, size=2.0, beta=0.5)
+        assert s.o == 2.0 and s.turning == 0.0
+
+    def test_infeasible_window_raises(self):
+        with pytest.raises(ValueError):
+            spot_ondemand_split(z=4.0, delta=2.0, size=1.9, beta=0.5)
+
+
+class TestProp44SelfOwned:
+    def test_f_nonincreasing_in_x(self):
+        xs = np.linspace(0.05, 0.99, 50)
+        vals = f_selfowned(10.0, 4.0, 3.0, xs)
+        assert np.all(np.diff(vals) <= 1e-9)
+
+    def test_f_beta_finishes_on_spot(self):
+        """After r = f(beta) self-owned, the remainder fits on spot alone:
+        beta * (delta - r) * size >= z - r * size."""
+        for (z, d, size, beta) in [(10, 4, 3, 0.5), (5, 8, 1, 0.3),
+                                   (20, 4, 6, 0.9)]:
+            r = float(f_selfowned(z, d, size, beta))
+            assert beta * (d - r) * size + r * size >= z - 1e-9
+
+    def test_f_zero_when_window_large(self):
+        # x >= e / size => f = 0
+        assert f_selfowned(6.0, 3.0, 4.0, 0.5) == 0.0  # e/size = .5 <= x
+
+    def test_policy12_caps(self):
+        r = selfowned_allocation(z=100.0, delta=4.0, size=3.0, beta0=0.1,
+                                 available=2.0)
+        assert r <= 2.0  # pool cap
+        r = selfowned_allocation(z=100.0, delta=4.0, size=3.0, beta0=0.1,
+                                 available=100.0)
+        assert r <= 4.0  # parallelism cap
+        r = selfowned_allocation(z=1.0, delta=64.0, size=10.0, beta0=0.01,
+                                 available=100.0)
+        assert r <= 1.0  # useful-work cap (ceil(z / size))

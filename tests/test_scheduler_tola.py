@@ -1,0 +1,109 @@
+"""System behaviour: Algorithm 2 end-to-end, pool accounting, TOLA learning,
+and the paper's headline claim (proposed < baselines)."""
+
+import numpy as np
+
+from repro.core import (
+    B_BIDS,
+    Policy,
+    SelfOwnedPool,
+    SpotMarket,
+    generate_chain_jobs,
+    run_greedy,
+    run_jobs,
+    run_tola,
+    spot_od_policies,
+)
+from repro.core.pool import RangeMax
+from repro.core.scheduler import evaluate_policy_fullpool
+
+
+def _setup(n=120, jt=1, seed=3):
+    jobs = generate_chain_jobs(n, job_type=jt, seed=seed)
+    market = SpotMarket(max(j.deadline for j in jobs) + 1, seed=seed + 1)
+    return jobs, market
+
+
+def test_proposed_beats_baselines():
+    """The paper's core claim at small scale: min-over-grid proposed cost
+    undercuts Greedy and Even benchmarks."""
+    jobs, m = _setup(150, jt=1)
+    best = min(run_jobs(jobs, p, m).average_unit_cost()
+               for p in spot_od_policies())
+    greedy = min(run_greedy(jobs, b, m).average_unit_cost() for b in B_BIDS)
+    even = min(run_jobs(jobs, p, m, windows="even",
+                        early_start=False).average_unit_cost()
+               for p in spot_od_policies())
+    assert best < greedy
+    assert best < even
+
+
+def test_selfowned_reduces_cost_monotonically():
+    jobs, m = _setup(80, jt=2)
+    pol = Policy(beta=0.625, bid=0.27, beta0=0.5)
+    alphas = [run_jobs(jobs, pol, m, r_total=r).average_unit_cost()
+              for r in (0, 200, 600)]
+    assert alphas[0] > alphas[1] > alphas[2]
+
+
+def test_pool_never_oversubscribed():
+    jobs, m = _setup(60, jt=2)
+    pol = Policy(beta=0.625, bid=0.27, beta0=1 / 2.2)
+    costs, r_alloc, pool = run_jobs(jobs, pol, m, r_total=50,
+                                    return_pool=True)
+    assert pool is not None
+    assert pool.used.max() <= 50
+    assert costs.selfowned_work.sum() <= pool.worked_instance_time + 1e-6
+
+
+def test_deadlines_always_met():
+    """No allocation path may ever miss a deadline (on-demand backstop)."""
+    jobs, m = _setup(100, jt=1)
+    for pol in (Policy(beta=0.455, bid=0.18), Policy(beta=1.0, bid=0.30)):
+        c = run_jobs(jobs, pol, m)
+        # all workload processed by one of the three classes
+        total = c.spot_work + c.ondemand_work + c.selfowned_work
+        np.testing.assert_allclose(total, c.workload, rtol=1e-9)
+
+
+def test_fullpool_equals_realized_when_no_selfowned():
+    jobs, m = _setup(50, jt=3)
+    pol = Policy(beta=0.769, bid=0.24)
+    a = run_jobs(jobs, pol, m)
+    b = evaluate_policy_fullpool(jobs, pol, m)
+    np.testing.assert_allclose(a.total_cost, b.total_cost, atol=1e-9)
+
+
+def test_tola_learns_good_policy():
+    """With enough jobs the weight mass should concentrate on policies whose
+    fixed cost is near the best fixed cost."""
+    jobs, m = _setup(400, jt=2, seed=11)
+    grid = spot_od_policies()
+    res = run_tola(jobs, grid, m, seed=0)
+    fixed = res.fixed_unit_costs
+    # weight-weighted expected cost is better than the uniform average
+    uniform = fixed.mean()
+    weighted = float((res.weights * fixed).sum())
+    assert weighted < uniform
+    # realized cost is within the policy-grid range
+    assert fixed.min() - 1e-9 <= res.average_unit_cost() <= fixed.max() + 0.05
+
+
+def test_rangemax_matches_naive():
+    rng = np.random.default_rng(0)
+    v = rng.integers(0, 100, 500).astype(float)
+    rm = RangeMax(v)
+    lo = rng.integers(0, 499, 200)
+    hi = lo + rng.integers(1, 80, 200)
+    got = rm.query(lo, hi)
+    want = np.array([v[l:h].max() if h <= 500 else v[l:500].max()
+                     for l, h in zip(lo, np.minimum(hi, 500))])
+    np.testing.assert_allclose(got, want)
+
+
+def test_early_start_never_hurts():
+    jobs, m = _setup(100, jt=1)
+    pol = Policy(beta=0.625, bid=0.27)
+    early = run_jobs(jobs, pol, m, early_start=True).average_unit_cost()
+    planned = run_jobs(jobs, pol, m, early_start=False).average_unit_cost()
+    assert early <= planned + 1e-9

@@ -1,0 +1,76 @@
+"""End-to-end behaviour: elastic training with preemption + restart, the
+fleet orchestrator driving paper-scheduled training DAGs, and the serving
+loop — the full two-layer system."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.launch.serve import serve_requests
+from repro.launch.train import train_loop
+from repro.sched import FleetOrchestrator, FleetSpec, training_job_dag
+
+
+def test_train_preempt_restart_resumes_exactly(tmp_path):
+    cfg = smoke_config("tinyllama_1_1b")
+    r1 = train_loop(cfg, steps=8, ckpt_dir=str(tmp_path), global_batch=4,
+                    seq_len=32, preempt_at=6, ckpt_every=3, log_every=100)
+    assert r1["status"] == "preempted" and r1["step"] == 6
+    # elastic restart (same single CPU device here; restores step 6)
+    r2 = train_loop(cfg, steps=8, ckpt_dir=str(tmp_path), global_batch=4,
+                    seq_len=32, resume=True, ckpt_every=3, log_every=100)
+    assert r2["status"] == "done"
+    # deterministic pipeline: steps 0..5 ran once, 6..7 after restore
+    assert len(r1["losses"]) + len(r2["losses"]) == 8
+    assert np.isfinite(r2["final_loss"])
+
+
+def test_train_loss_decreases(tmp_path):
+    cfg = smoke_config("tinyllama_1_1b")
+    r = train_loop(cfg, steps=30, ckpt_dir=str(tmp_path), global_batch=4,
+                   seq_len=32, ckpt_every=100, log_every=100)
+    first = np.mean(r["losses"][:5])
+    last = np.mean(r["losses"][-5:])
+    assert last < first  # synthetic but learnable (hash n-gram structure)
+
+
+def test_serve_smoke():
+    cfg = smoke_config("granite_3_8b")
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab, (4, 16), dtype=np.int32)
+    out, stats = serve_requests(cfg, prompts, batch=2, max_new=6)
+    assert out.shape == (4, 6)
+    assert stats["requests"] == 4
+    assert (out >= 0).all() and (out < cfg.vocab).all()
+
+
+def test_fleet_orchestrator_end_to_end():
+    """Layer A scheduling Layer B jobs: training DAGs -> chain transform ->
+    TOLA-learned policies -> cost report."""
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(1.0, 30))
+    jobs = [training_job_dag("llama3_8b", float(a), deadline_factor=2.0,
+                             max_pods=8, cache=[]) for a in arrivals]
+    fleet = FleetSpec(reserved_pods=4)
+    orch = FleetOrchestrator(fleet, horizon_units=float(arrivals[-1] + 50))
+    rep = orch.schedule(jobs, learn=True)
+    fr = rep.spot_fraction + rep.selfowned_fraction + rep.ondemand_fraction
+    assert abs(fr - 1.0) < 1e-6
+    assert rep.unit_cost < 1.0          # better than all-on-demand
+    assert rep.selfowned_fraction > 0   # reserved pods actually used
+
+    # learning beats not-learning-at-all only in expectation; but the fixed
+    # best policy must beat the single worst policy:
+    rep_fixed = orch.schedule(jobs, learn=False)
+    assert rep_fixed.unit_cost <= rep.unit_cost + 0.05
+
+
+def test_stage_plan_windows_are_feasible():
+    jobs = [training_job_dag("mamba2_2_7b", 0.0, max_pods=4, cache=[])]
+    orch = FleetOrchestrator(FleetSpec(reserved_pods=2), horizon_units=200.0)
+    from repro.core import Policy
+    plan = orch.stage_plan(jobs[0], Policy(beta=0.625, bid=0.24, beta0=0.5))
+    sizes = plan.sizes[plan.mask]
+    assert np.all(sizes > 0)
+    assert plan.ends[0, plan.mask[0]][-1] <= jobs[0].deadline + 1e-6
