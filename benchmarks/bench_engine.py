@@ -1,0 +1,124 @@
+"""Evaluation-engine throughput: numpy vs jax vs pallas.
+
+Times ``repro.engine.evaluate_grid`` on a (n_jobs x n_policies x S) grid —
+the TOLA counterfactual cost-matrix workload — per backend, and emits
+``BENCH_engine.json``:
+
+    PYTHONPATH=src python -m benchmarks.bench_engine \
+        [--jobs 512] [--policies 70] [--scenarios 4] [--r 600] \
+        [--backends numpy jax pallas] [--out BENCH_engine.json]
+
+Reported per backend: wall seconds (best of --iters, after one untimed
+warmup that absorbs jit/pallas compilation), throughput in grid cells per
+second (cells = S * n_jobs * n_policies), and the deduplicated evaluation
+group count (the engine collapses policies sharing (windows, beta_0, bid) —
+throughput is quoted over the FULL grid the caller asked for). Off-TPU the
+pallas backend runs its kernels in interpret mode (noted in the output —
+that measures the kernel's logic, not TPU speed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import generate_chain_jobs, selfowned_policies
+from repro.engine import build_grid_plan, evaluate_grid, make_scenarios
+
+__all__ = ["run", "main"]
+
+
+def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
+        backends: list[str], seed: int = 0, job_type: int = 2,
+        iters: int = 2) -> dict:
+    jobs = generate_chain_jobs(n_jobs, job_type, seed=seed)
+    horizon = max(j.deadline for j in jobs) + 1.0
+    markets = make_scenarios(horizon, n_scenarios, seed=seed + 1000)
+    grid = selfowned_policies()[:n_policies]
+    if len(grid) < n_policies:
+        raise ValueError(f"policy grid has only {len(grid)} policies")
+    gplan = build_grid_plan(jobs, grid, r_total)
+    cells = n_scenarios * n_jobs * len(grid)
+    out = {
+        "n_jobs": n_jobs,
+        "n_policies": len(grid),
+        "n_scenarios": n_scenarios,
+        "r_total": r_total,
+        "job_type": job_type,
+        "seed": seed,
+        "cells": cells,
+        "eval_groups": len(gplan.groups),
+        "L": gplan.L,
+        "n_slots": markets[0].n_slots,
+        "backends": {},
+    }
+    try:
+        import jax
+        out["jax_backend"] = jax.default_backend()
+    except Exception:
+        out["jax_backend"] = None
+
+    ref = None
+    for backend in backends:
+        times = []
+        warmup = None
+        res = None
+        for it in range(iters + 1):
+            t0 = time.time()
+            res = evaluate_grid(jobs, grid, markets, r_total, backend=backend)
+            dt = time.time() - t0
+            if it == 0:          # warmup pass absorbs jit/pallas compilation
+                warmup = dt
+            else:
+                times.append(dt)
+        best = min(times)
+        entry = {
+            "seconds": best,
+            "warmup_seconds": warmup,
+            "cells_per_sec": cells / best,
+            # Mirrors backend_pallas.run's default: interpret iff CPU.
+            "interpret": backend == "pallas"
+            and out["jax_backend"] == "cpu",
+        }
+        out["backends"][backend] = entry
+        if ref is None:
+            ref = res.unit_cost
+            entry["max_abs_diff_vs_first"] = 0.0
+        else:
+            entry["max_abs_diff_vs_first"] = float(
+                np.abs(res.unit_cost - ref).max())
+        print(f"[{backend:6s}] {best:8.3f}s  "
+              f"{cells / best / 1e3:10.1f}k cells/s  "
+              f"maxdiff {entry['max_abs_diff_vs_first']:.2e}"
+              + ("  (interpret)" if entry["interpret"] else ""))
+    return out
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--jobs", type=int, default=512)
+    p.add_argument("--policies", type=int, default=70)
+    p.add_argument("--scenarios", type=int, default=4)
+    p.add_argument("--r", type=int, default=600)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--job-type", type=int, default=2)
+    p.add_argument("--iters", type=int, default=2)
+    p.add_argument("--backends", nargs="+",
+                   default=["numpy", "jax", "pallas"],
+                   choices=["numpy", "jax", "pallas"])
+    p.add_argument("--out", default="BENCH_engine.json")
+    args = p.parse_args(argv)
+    res = run(args.jobs, args.policies, args.scenarios, args.r,
+              args.backends, seed=args.seed, job_type=args.job_type,
+              iters=args.iters)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {args.out}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

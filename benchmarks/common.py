@@ -13,40 +13,64 @@ import time
 
 import numpy as np
 
-from repro.core import SpotMarket, generate_chain_jobs
-from repro.core.scheduler import Policy, run_jobs
+from repro.core import generate_chain_jobs, sweep_policies
+from repro.core.scheduler import Policy
+from repro.engine import make_scenarios
 
-__all__ = ["Setup", "make_setup", "sweep_min", "argparser", "print_table"]
+__all__ = ["Setup", "make_setup", "sweep_min", "greedy_min",
+           "argparser", "print_table"]
 
 
 class Setup:
-    def __init__(self, jobs, market, job_type: int, seed: int):
+    def __init__(self, jobs, markets, job_type: int, seed: int,
+                 backend: str = "auto"):
         self.jobs = jobs
-        self.market = market
+        self.markets = markets
         self.job_type = job_type
         self.seed = seed
+        self.backend = backend
+
+    @property
+    def market(self):
+        """Scenario 0 — the single market of the paper's tables."""
+        return self.markets[0]
 
     @property
     def total_workload(self) -> float:
         return float(sum(j.total_work for j in self.jobs))
 
 
-def make_setup(n_jobs: int, job_type: int, seed: int = 0) -> Setup:
+def make_setup(n_jobs: int, job_type: int, seed: int = 0,
+               scenarios: int = 1, scenario_kind: str = "fresh",
+               backend: str = "auto") -> Setup:
+    """Job stream + S market scenarios (S=1 reproduces the paper setup)."""
     jobs = generate_chain_jobs(n_jobs, job_type, seed=seed)
     horizon = max(j.deadline for j in jobs) + 1.0
-    market = SpotMarket(horizon, seed=seed + 1000)
-    return Setup(jobs, market, job_type, seed)
+    markets = make_scenarios(horizon, max(scenarios, 1), seed=seed + 1000,
+                             kind=scenario_kind)
+    return Setup(jobs, markets, job_type, seed, backend)
 
 
-def sweep_min(setup: Setup, policies: list[Policy], **run_kwargs):
-    """min over a policy grid of the realized average unit cost."""
-    best = None
-    for pol in policies:
-        costs = run_jobs(setup.jobs, pol, setup.market, **run_kwargs)
-        a = costs.average_unit_cost()
-        if best is None or a < best[1]:
-            best = (pol, a, costs)
-    return best
+def sweep_min(setup: Setup, policies: list[Policy], **kwargs):
+    """min over a policy grid of the realized average unit cost.
+
+    One batched engine pass over policies x bids x scenarios (the alpha of
+    each policy is its scenario mean); see ``repro.core.sweep_policies``.
+    """
+    kwargs.setdefault("backend", setup.backend)
+    pol, alpha, costs, _ = sweep_policies(setup.jobs, policies,
+                                          setup.markets, **kwargs)
+    return pol, alpha, costs
+
+
+def greedy_min(setup: Setup, bids) -> float:
+    """min over bids of the (scenario-mean) Greedy benchmark alpha."""
+    from repro.core import run_greedy
+
+    return min(
+        float(np.mean([run_greedy(setup.jobs, b, m).average_unit_cost()
+                       for m in setup.markets]))
+        for b in bids)
 
 
 def argparser(desc: str) -> argparse.ArgumentParser:
@@ -56,6 +80,14 @@ def argparser(desc: str) -> argparse.ArgumentParser:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--types", type=int, nargs="+", default=[1, 2, 3, 4])
     p.add_argument("--r", type=int, nargs="+", default=[300, 600, 900, 1200])
+    p.add_argument("--scenarios", type=int, default=1,
+                   help="market scenarios evaluated in one engine pass "
+                        "(1 = the paper's single market)")
+    p.add_argument("--scenario-kind", choices=["fresh", "regime"],
+                   default="fresh")
+    p.add_argument("--backend", default="auto",
+                   choices=["auto", "numpy", "jax", "pallas"],
+                   help="evaluation-engine backend")
     return p
 
 

@@ -11,20 +11,26 @@ see EXPERIMENTS.md.
 
 from __future__ import annotations
 
-from benchmarks.common import Timer, argparser, make_setup, print_table, sweep_min
-from repro.core import B_BIDS, run_greedy, spot_od_policies
-from repro.core.scheduler import Policy
+from benchmarks.common import (
+    Timer,
+    argparser,
+    greedy_min,
+    make_setup,
+    print_table,
+    sweep_min,
+)
+from repro.core import B_BIDS, spot_od_policies
 
 
-def run(n_jobs: int, types: list[int], seed: int = 0) -> dict:
+def run(n_jobs: int, types: list[int], seed: int = 0, scenarios: int = 1,
+        scenario_kind: str = "fresh", backend: str = "auto") -> dict:
     out = {}
     for jt in types:
         with Timer(f"exp1 type {jt}"):
-            s = make_setup(n_jobs, jt, seed)
+            s = make_setup(n_jobs, jt, seed, scenarios=scenarios,
+                           scenario_kind=scenario_kind, backend=backend)
             pol, alpha, _ = sweep_min(s, spot_od_policies(), early_start=True)
-            greedy = min(
-                run_greedy(s.jobs, b, s.market).average_unit_cost()
-                for b in B_BIDS)
+            greedy = greedy_min(s, B_BIDS)
             even_planned = sweep_min(
                 s, spot_od_policies(), windows="even", early_start=False)[1]
             even_early = sweep_min(
@@ -41,7 +47,8 @@ def run(n_jobs: int, types: list[int], seed: int = 0) -> dict:
 
 def main(argv=None):
     args = argparser(__doc__).parse_args(argv)
-    res = run(args.jobs, args.types, args.seed)
+    res = run(args.jobs, args.types, args.seed, args.scenarios,
+              args.scenario_kind, args.backend)
     rows = [[jt, f"{r['alpha']:.4f}", r["best_policy"],
              f"{r['rho_vs_greedy']:.2%}", f"{r['rho_vs_even']:.2%}",
              f"{r['rho_vs_even_early']:.2%}"] for jt, r in res.items()]

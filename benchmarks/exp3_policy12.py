@@ -13,26 +13,24 @@ horizon).
 
 from __future__ import annotations
 
-from benchmarks.common import Timer, argparser, make_setup, print_table
+from benchmarks.common import Timer, argparser, make_setup, print_table, sweep_min
 from repro.core import selfowned_policies
-from repro.core.scheduler import run_jobs
 
 
 def _best(setup, r, selfowned):
-    best = None
-    for pol in selfowned_policies():
-        costs = run_jobs(setup.jobs, pol, setup.market, r_total=r,
-                         selfowned=selfowned, early_start=True)
-        a = costs.average_unit_cost()
-        if best is None or a < best[0]:
-            best = (a, pol, costs)
-    return best
+    """Engine-batched sweep; returns (alpha, policy, StreamCosts)."""
+    pol, alpha, costs = sweep_min(setup, selfowned_policies(), r_total=r,
+                                  selfowned=selfowned, early_start=True)
+    return alpha, pol, costs
 
 
-def run(n_jobs: int, types: list[int], rs: list[int], seed: int = 0) -> dict:
+def run(n_jobs: int, types: list[int], rs: list[int], seed: int = 0,
+        scenarios: int = 1, scenario_kind: str = "fresh",
+        backend: str = "auto") -> dict:
     out = {}
     for jt in types:
-        s = make_setup(n_jobs, jt, seed)
+        s = make_setup(n_jobs, jt, seed, scenarios=scenarios,
+                       scenario_kind=scenario_kind, backend=backend)
         horizon = max(j.deadline for j in s.jobs)
         for r in rs:
             with Timer(f"exp3 type {jt} r={r}"):
@@ -51,7 +49,8 @@ def run(n_jobs: int, types: list[int], rs: list[int], seed: int = 0) -> dict:
 
 def main(argv=None):
     args = argparser(__doc__).parse_args(argv)
-    res = run(args.jobs, args.types, args.r, args.seed)
+    res = run(args.jobs, args.types, args.r, args.seed, args.scenarios,
+              args.scenario_kind, args.backend)
     rows = [[r, jt, f"{v['alpha_prop']:.4f}", f"{v['alpha_naive']:.4f}",
              f"{v['rho']:.2%}", f"{v['mu']:.4f}"]
             for (r, jt), v in sorted(res.items())]

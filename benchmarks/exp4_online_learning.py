@@ -8,35 +8,49 @@ TOLA drives the proposed grid vs when it drives the benchmark grid
 
 from __future__ import annotations
 
+import numpy as np
+
 from benchmarks.common import Timer, argparser, make_setup, print_table
 from repro.core import (
     benchmark_bid_policies,
-    run_tola,
+    run_tola_scenarios,
     selfowned_policies,
     spot_od_policies,
 )
 
 
-def run(n_jobs: int, rs: list[int], seed: int = 0, job_type: int = 2) -> dict:
+def run(n_jobs: int, rs: list[int], seed: int = 0, job_type: int = 2,
+        scenarios: int = 1, scenario_kind: str = "fresh",
+        backend: str = "auto") -> dict:
     out = {}
-    s = make_setup(n_jobs, job_type, seed)
+    s = make_setup(n_jobs, job_type, seed, scenarios=scenarios,
+                   scenario_kind=scenario_kind, backend=backend)
     for r in rs:
         with Timer(f"exp4 r={r}"):
             grid = selfowned_policies() if r > 0 else spot_od_policies()
-            prop = run_tola(s.jobs, grid, s.market, r_total=r, seed=seed,
-                            early_start=True)
-            bench = run_tola(
-                s.jobs, benchmark_bid_policies(), s.market, r_total=r,
+            # Counterfactual matrices for ALL scenarios come out of one
+            # engine pass; the sequential replay runs per scenario.
+            props = run_tola_scenarios(
+                s.jobs, grid, s.markets, r_total=r, seed=seed,
+                early_start=True, backend=backend)
+            benches = run_tola_scenarios(
+                s.jobs, benchmark_bid_policies(), s.markets, r_total=r,
                 windows="even", selfowned="naive", early_start=False,
-                seed=seed)
+                seed=seed, backend=backend)
+            a_prop = np.array([p.average_unit_cost() for p in props])
+            a_bench = np.array([b.average_unit_cost() for b in benches])
             out[r] = {
-                "alpha_tola": prop.average_unit_cost(),
-                "alpha_bench": bench.average_unit_cost(),
-                "rho_bar": 1 - prop.average_unit_cost() / bench.average_unit_cost(),
-                "best_fixed": prop.best_fixed_unit_cost,
-                "regret": prop.regret_per_job,
-                "top_weight": float(prop.weights.max()),
+                "alpha_tola": float(a_prop.mean()),
+                "alpha_bench": float(a_bench.mean()),
+                "rho_bar": 1 - float(a_prop.mean()) / float(a_bench.mean()),
+                "best_fixed": float(np.mean(
+                    [p.best_fixed_unit_cost for p in props])),
+                "regret": float(np.mean([p.regret_per_job for p in props])),
+                "top_weight": float(np.mean(
+                    [p.weights.max() for p in props])),
             }
+            if len(s.markets) > 1:
+                out[r]["alpha_tola_std"] = float(a_prop.std())
     return out
 
 
@@ -44,7 +58,8 @@ def main(argv=None):
     p = argparser(__doc__)
     p.set_defaults(r=[0, 300, 600, 900, 1200])
     args = p.parse_args(argv)
-    res = run(args.jobs, args.r, args.seed)
+    res = run(args.jobs, args.r, args.seed, scenarios=args.scenarios,
+              scenario_kind=args.scenario_kind, backend=args.backend)
     rows = [[r, f"{v['alpha_tola']:.4f}", f"{v['alpha_bench']:.4f}",
              f"{v['rho_bar']:.2%}", f"{v['best_fixed']:.4f}",
              f"{v['regret']:.4f}", f"{v['top_weight']:.3f}"]

@@ -7,9 +7,17 @@ Sections:
   exp2  Table 3  — overall improvement with self-owned instances
   exp3  Tables 4+5 — policy (12) vs naive self-owned (+ utilization ratio)
   exp4  Table 6  — TOLA online learning
+  engine          — evaluation-engine throughput (numpy vs jax vs pallas)
+                    on a (512 jobs x 70 policies x 4 scenarios) grid; emits
+                    BENCH_engine.json (see benchmarks/bench_engine.py for
+                    how to read it — off-TPU the pallas number is interpret
+                    mode, i.e. kernel logic, not TPU speed)
   roofline        — per-(arch x shape) roofline terms from the compiled
                     dry-run (reads benchmarks/roofline_cache.json if the
                     dry-run sweep has been run; see launch/dryrun.py)
+
+Every exp accepts --scenarios S / --scenario-kind / --backend to evaluate S
+spot-market scenarios in one engine pass (S=1 = the paper's tables).
 """
 
 from __future__ import annotations
@@ -26,9 +34,11 @@ def main(argv=None):
     p.add_argument("--quick", action="store_true",
                    help="small streams / reduced grids for CI-speed runs")
     p.add_argument("--skip", nargs="*", default=[],
-                   choices=["exp1", "exp2", "exp3", "exp4", "roofline"])
+                   choices=["exp1", "exp2", "exp3", "exp4", "engine",
+                            "roofline"])
     p.add_argument("--only", nargs="*", default=None,
-                   choices=["exp1", "exp2", "exp3", "exp4", "roofline"])
+                   choices=["exp1", "exp2", "exp3", "exp4", "engine",
+                            "roofline"])
     args = p.parse_args(argv)
 
     n_jobs = args.jobs or (300 if args.quick else 1500)
@@ -60,6 +70,13 @@ def main(argv=None):
         from benchmarks import exp4_online_learning
         exp4_online_learning.main(["--jobs", str(n_jobs),
                                    "--r", *map(str, rs4)])
+    if want("engine"):
+        from benchmarks import bench_engine
+        if args.quick:
+            bench_engine.main(["--jobs", "128", "--policies", "64",
+                               "--scenarios", "2", "--iters", "1"])
+        else:
+            bench_engine.main([])
     if want("roofline"):
         from benchmarks import roofline
         roofline.main([])

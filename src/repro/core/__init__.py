@@ -11,6 +11,7 @@ from repro.core.baselines import (
     run_greedy,
     selfowned_policies,
     spot_od_policies,
+    sweep_policies,
 )
 from repro.core.dealloc import dealloc, expected_spot_work, window_sizes
 from repro.core.market import SpotMarket
@@ -18,7 +19,7 @@ from repro.core.policy import f_selfowned, selfowned_allocation, spot_ondemand_s
 from repro.core.pool import SelfOwnedPool
 from repro.core.scheduler import Policy, StreamCosts, evaluate_policy_fullpool, run_jobs
 from repro.core.simulate import simulate_tasks
-from repro.core.tola import cost_matrix, run_tola
+from repro.core.tola import cost_matrix, run_tola, run_tola_scenarios
 from repro.core.transform import chain_of, transform
 from repro.core.types import Allocation, ChainJob, DAGJob, Task, chain_from_arrays
 from repro.core.workload import generate_chain_jobs, generate_dag_jobs
@@ -29,8 +30,9 @@ __all__ = [
     "dealloc", "window_sizes", "expected_spot_work",
     "f_selfowned", "selfowned_allocation", "spot_ondemand_split",
     "simulate_tasks", "run_jobs", "evaluate_policy_fullpool",
-    "run_tola", "cost_matrix", "transform", "chain_of",
+    "run_tola", "run_tola_scenarios", "cost_matrix", "transform", "chain_of",
     "generate_chain_jobs", "generate_dag_jobs",
     "spot_od_policies", "selfowned_policies", "benchmark_bid_policies",
-    "run_greedy", "run_even", "C1_BETA0", "C2_BETA", "B_BIDS",
+    "run_greedy", "run_even", "sweep_policies", "C1_BETA0", "C2_BETA",
+    "B_BIDS",
 ]

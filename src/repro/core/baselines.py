@@ -23,7 +23,7 @@ from repro.core.types import ChainJob
 __all__ = [
     "C1_BETA0", "C2_BETA", "B_BIDS",
     "spot_od_policies", "selfowned_policies", "benchmark_bid_policies",
-    "run_greedy", "run_even",
+    "run_greedy", "run_even", "sweep_policies",
 ]
 
 C1_BETA0 = (2 / 12, 4 / 14, 6 / 16, 8 / 18, 1 / 2, 0.6, 0.7)
@@ -45,6 +45,32 @@ def selfowned_policies() -> list[Policy]:
 def benchmark_bid_policies(beta: float = 0.5, beta0: float | None = None) -> list[Policy]:
     """P' = {b} — the benchmarks are parameterized by bid only."""
     return [Policy(beta=beta, bid=b, beta0=beta0) for b in B_BIDS]
+
+
+def sweep_policies(
+    jobs: list[ChainJob],
+    policies: list[Policy],
+    markets,
+    r_total: int = 0,
+    windows: str = "dealloc",
+    selfowned: str = "prop12",
+    early_start: bool = True,
+    backend: str = "auto",
+) -> "tuple[Policy, float, StreamCosts, EngineResult]":  # noqa: F821
+    """min over a policy grid of the realized average unit cost.
+
+    One batched engine pass with shared-pool (run_jobs) semantics across all
+    policies x bids x scenarios; returns (best policy, its alpha —
+    scenario-mean when several markets are given, its StreamCosts in
+    scenario 0, the full EngineResult).
+    """
+    from repro.engine import evaluate_grid
+
+    res = evaluate_grid(jobs, policies, markets, r_total, windows=windows,
+                        selfowned=selfowned, early_start=early_start,
+                        pool="shared", backend=backend)
+    p, alpha = res.best()
+    return policies[p], alpha, res.stream_costs(p, 0), res
 
 
 def run_greedy(

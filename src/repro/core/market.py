@@ -212,6 +212,33 @@ class SpotMarket:
         self.boundaries = np.arange(self.n_slots + 1, dtype=np.float64) * self.slot
         self._views: dict[float, BidView] = {}
 
+    @classmethod
+    def from_prices(
+        cls,
+        prices: np.ndarray,
+        slots_per_unit: int = SLOTS_PER_UNIT,
+        p_ondemand: float = P_ONDEMAND,
+    ) -> "SpotMarket":
+        """Replay adapter: wrap a realized per-slot price trace.
+
+        The engine's scenario layer uses this to evaluate policy grids
+        against recorded (or adversarial) spot-price paths instead of the
+        synthetic price law — all downstream cumulative-array machinery is
+        identical.
+        """
+        prices = np.asarray(prices, dtype=np.float64)
+        if prices.ndim != 1 or len(prices) == 0:
+            raise ValueError("prices must be a non-empty 1-D per-slot trace")
+        m = cls.__new__(cls)
+        m.slots_per_unit = slots_per_unit
+        m.slot = 1.0 / slots_per_unit
+        m.n_slots = len(prices)
+        m.p_ondemand = float(p_ondemand)
+        m.price = prices.copy()
+        m.boundaries = np.arange(m.n_slots + 1, dtype=np.float64) * m.slot
+        m._views = {}
+        return m
+
     @property
     def horizon(self) -> float:
         return float(self.boundaries[-1])

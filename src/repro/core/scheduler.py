@@ -289,6 +289,7 @@ def evaluate_policy_fullpool(
     selfowned: str = "prop12",
     early_start: bool = True,
     availability=None,
+    backend: str = "numpy",
 ) -> StreamCosts:
     """Counterfactual per-job costs with a dedicated (uncontended) pool.
 
@@ -301,17 +302,15 @@ def evaluate_policy_fullpool(
     per-task self-owned availability. Defaults to the dedicated pool
     (``r_total`` everywhere); TOLA's pool-aware refinement passes the
     realized residual-occupancy query instead.
+
+    Routed through the evaluation engine as a 1-policy grid; grids should
+    call ``repro.engine.evaluate_grid`` directly (one batched pass over
+    policies x bids x scenarios with backend dispatch).
     """
-    plan = build_plans(jobs, policy, r_total, windows)
-    if r_total > 0:
-        if availability is None:
-            avail = float(r_total)
-        else:
-            avail = availability(plan.starts, plan.ends)
-        r_alloc = _selfowned_counts_vec(
-            plan.z, plan.delta, plan.sizes, plan.beta0[:, None],
-            avail, selfowned)
-        r_alloc = np.where(plan.mask, r_alloc, 0.0)
-    else:
-        r_alloc = np.zeros_like(plan.z)
-    return _simulate_plan(plan, r_alloc, market, early_start)
+    from repro.engine import evaluate_grid  # engine depends on this module
+
+    res = evaluate_grid(
+        jobs, [policy], market, r_total, windows=windows,
+        selfowned=selfowned, early_start=early_start,
+        availability=availability, pool="dedicated", backend=backend)
+    return res.stream_costs(0, 0)

@@ -35,7 +35,23 @@ import numpy as np
 
 from repro.core.market import BidView
 
-__all__ = ["TaskSim", "simulate_tasks"]
+__all__ = ["TaskSim", "simulate_tasks", "FLEX_REL", "FLEX_ABS"]
+
+# Definition 3.1 requires STRICTLY positive flexibility to use spot. Tasks
+# whose window exactly equals their minimum execution time (z == d * size —
+# an atom under Dealloc, which leaves unselected tasks with zero slack) sit
+# exactly on the turning-point guard, where the cost is discontinuous
+# (ride-spot vs all-on-demand). An epsilon makes the branch deterministic
+# under floating-point rounding: slack <= max(FLEX_REL * window,
+# FLEX_ABS * end) counts as "no flexibility". FLEX_REL handles reassociation
+# noise on the window itself; FLEX_ABS dominates the ABSOLUTE f32 rounding
+# of the chain clock (~1.2e-7 * t), which exceeds the relative term for
+# short windows late in the horizon. The SAME thresholds are used by the
+# f64 oracle and the f32 jax/pallas backends so every backend takes the
+# same branch everywhere except a thin sliver around the threshold
+# (DESIGN.md §5).
+FLEX_REL = 1e-4
+FLEX_ABS = 1e-5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,8 +108,11 @@ def simulate_tasks(
 
     # Turning point: first t with H(t) >= H0 + (end - start) - need.
     h_target = H0 + (end - start) - need
-    # If need >= window the task has no flexibility at start: turn immediately.
-    t_turn = np.where(h_target <= H0 + 1e-15, start, view.t_for_H(h_target))
+    # If need >= window (up to the relative flexibility epsilon) the task has
+    # no flexibility at start: turn immediately.
+    no_flex = (end - start) - need <= np.maximum(
+        1e-15, np.maximum(FLEX_REL * (end - start), FLEX_ABS * end))
+    t_turn = np.where(no_flex, start, view.t_for_H(h_target))
     # Spot-alone finish: first t with A(t) >= A0 + need.
     t_fin = view.t_for_A(A0 + need)
 

@@ -35,11 +35,10 @@ from repro.core.scheduler import (
     _allocate_pool,
     _simulate_plan,
     build_plans,
-    evaluate_policy_fullpool,
 )
 from repro.core.types import ChainJob
 
-__all__ = ["TolaResult", "cost_matrix", "run_tola"]
+__all__ = ["TolaResult", "cost_matrix", "run_tola", "run_tola_scenarios"]
 
 
 @dataclasses.dataclass
@@ -72,16 +71,21 @@ def cost_matrix(
     selfowned: str = "prop12",
     early_start: bool = True,
     availability=None,
+    backend: str = "auto",
 ) -> np.ndarray:
-    """C[j, pi] — per-unit-workload counterfactual cost of job j under pi."""
-    n, m = len(jobs), len(policies)
-    C = np.zeros((n, m))
-    for pi, pol in enumerate(policies):
-        costs = evaluate_policy_fullpool(
-            jobs, pol, market, r_total, windows=windows, selfowned=selfowned,
-            early_start=early_start, availability=availability)
-        C[:, pi] = costs.total_cost / np.maximum(costs.workload, 1e-12)
-    return C
+    """C[j, pi] — per-unit-workload counterfactual cost of job j under pi.
+
+    Routed through the batched evaluation engine: the whole grid is one
+    ``evaluate_grid`` call (deduplicated policy groups, backend-dispatched to
+    numpy / jax / the pallas kernel — see ``repro.engine``).
+    """
+    from repro.engine import evaluate_grid  # engine depends on core
+
+    res = evaluate_grid(
+        jobs, policies, market, r_total, windows=windows,
+        selfowned=selfowned, early_start=early_start,
+        availability=availability, pool="dedicated", backend=backend)
+    return res.matrix
 
 
 def _residual_availability(pool, r_total: int, slot: float):
@@ -108,6 +112,8 @@ def run_tola(
     selfowned: str = "prop12",
     early_start: bool = True,
     pool_iters: int = 1,
+    backend: str = "auto",
+    _C0: np.ndarray | None = None,
 ) -> TolaResult:
     """Full Algorithm 4 over an arrival-ordered job list.
 
@@ -117,6 +123,11 @@ def run_tola(
     residual availability realized by the previous iteration's run — without
     this, the learner never sees self-owned scarcity and over-rewards
     pool-hogging (small beta_0) policies.
+
+    ``backend`` selects the engine backend for the cost-matrix evaluations;
+    ``_C0`` optionally injects a precomputed iteration-0 matrix (used by
+    ``run_tola_scenarios`` to batch matrices across scenarios in one engine
+    pass).
     """
     if not jobs or not policies:
         raise ValueError("need jobs and policies")
@@ -130,9 +141,12 @@ def run_tola(
 
     availability = None
     iters = 1 + (pool_iters if r_total > 0 else 0)
-    for _ in range(iters):
-        C = cost_matrix(jobs, policies, market, r_total, windows, selfowned,
-                        early_start, availability)
+    for it in range(iters):
+        if it == 0 and _C0 is not None:
+            C = _C0
+        else:
+            C = cost_matrix(jobs, policies, market, r_total, windows,
+                            selfowned, early_start, availability, backend)
         logw = np.full(m, -np.log(m))
         chosen = np.zeros(n, dtype=np.int64)
         # Merge arrival events (sample) and update events (a_j + d).
@@ -165,3 +179,38 @@ def run_tola(
     fixed = (C * Z[:, None]).sum(axis=0) / Z.sum()
     return TolaResult(chosen=chosen, weights=final_w, realized=realized,
                       cost_matrix=C, fixed_unit_costs=fixed)
+
+
+def run_tola_scenarios(
+    jobs: list[ChainJob],
+    policies: list[Policy],
+    markets: list[SpotMarket],
+    r_total: int = 0,
+    seed: int = 0,
+    windows: str = "dealloc",
+    selfowned: str = "prop12",
+    early_start: bool = True,
+    pool_iters: int = 1,
+    backend: str = "auto",
+) -> list[TolaResult]:
+    """Algorithm 4 across S market scenarios, cost matrices batched.
+
+    The counterfactual matrices of ALL scenarios are computed in one
+    ``evaluate_grid`` pass (the engine's scenario axis); the sequential
+    sample/update replay then runs per scenario with seed ``seed + s``.
+    Pool-aware refinements (r_total > 0) re-score per scenario, since the
+    realized residual availability is scenario-specific.
+    """
+    from repro.engine import evaluate_grid
+
+    res = evaluate_grid(
+        jobs, policies, markets, r_total, windows=windows,
+        selfowned=selfowned, early_start=early_start, pool="dedicated",
+        backend=backend)
+    return [
+        run_tola(jobs, policies, m, r_total, seed=seed + s, windows=windows,
+                 selfowned=selfowned, early_start=early_start,
+                 pool_iters=pool_iters, backend=backend,
+                 _C0=res.unit_cost[s])
+        for s, m in enumerate(markets)
+    ]

@@ -1,0 +1,29 @@
+"""Backend-dispatching batched evaluation engine (DESIGN.md §6).
+
+The system's hot loop — scoring every job under every policy of the TOLA
+grid, across market scenarios — as one batched computation:
+
+    from repro.engine import evaluate_grid
+    res = evaluate_grid(jobs, policies, markets, backend="auto")
+    C = res.unit_cost[s]          # (n_jobs, n_policies) cost matrix
+
+Layers: plan (``plan.py`` — deduplicated PlanBatch groups), backends
+(``backend_{numpy,jax,pallas}.py``), scenarios (``scenarios.py`` — fresh /
+regime-shifted / replay market families).
+"""
+
+from repro.engine.api import available_backends, evaluate_grid, resolve_backend
+from repro.engine.plan import EvalGroup, GridPlan, build_grid_plan
+from repro.engine.result import EngineResult
+from repro.engine.scenarios import (
+    check_scenarios,
+    make_scenarios,
+    replay_scenarios,
+    stack_views,
+)
+
+__all__ = [
+    "evaluate_grid", "available_backends", "resolve_backend",
+    "EngineResult", "EvalGroup", "GridPlan", "build_grid_plan",
+    "make_scenarios", "replay_scenarios", "check_scenarios", "stack_views",
+]

@@ -1,0 +1,142 @@
+"""``evaluate_grid`` — the single entry point of the evaluation engine.
+
+Batches the TOLA counterfactual cost matrix (and every fixed-policy sweep)
+across policies x bids x market scenarios and dispatches to a backend:
+
+* ``numpy``  — float64 closed-form simulators from ``core/`` (exact oracle);
+* ``jax``    — vectorized jnp (``kernels/ref.py``), scenario axis vmapped;
+* ``pallas`` — the ``policy_cost_chain`` TPU kernel, one launch per bid
+  covering the whole (scenario x policy x job) grid;
+* ``auto``   — pallas on TPU/GPU, numpy otherwise.
+
+All backends consume the same deduplicated ``GridPlan`` (see ``plan.py``)
+and fill the same (S, J, P) result tensors, so parity is testable cell by
+cell (tests/test_engine.py).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.market import SpotMarket
+from repro.core.scheduler import Policy
+from repro.core.types import ChainJob
+from repro.engine.plan import build_grid_plan
+from repro.engine.result import EngineResult
+from repro.engine.scenarios import check_scenarios
+
+__all__ = ["evaluate_grid", "available_backends", "resolve_backend"]
+
+_BACKENDS = ("numpy", "jax", "pallas")
+
+
+def available_backends() -> list[str]:
+    """Backends usable in this process (jax/pallas need importable jax)."""
+    out = ["numpy"]
+    try:
+        import jax  # noqa: F401
+        out += ["jax", "pallas"]
+    except Exception:
+        pass
+    return out
+
+
+def resolve_backend(backend: str) -> str:
+    """Resolve "auto" (env override REPRO_ENGINE_BACKEND honored first)."""
+    if backend == "auto":
+        backend = os.environ.get("REPRO_ENGINE_BACKEND", "auto")
+    if backend == "auto":
+        try:
+            import jax
+            return "pallas" if jax.default_backend() != "cpu" else "numpy"
+        except Exception:
+            return "numpy"
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; pick from "
+                         f"{_BACKENDS + ('auto',)}")
+    return backend
+
+
+def evaluate_grid(
+    jobs: list[ChainJob],
+    policies: Sequence[Policy],
+    markets: SpotMarket | Sequence[SpotMarket],
+    r_total: int = 0,
+    *,
+    windows: str = "dealloc",
+    selfowned: str = "prop12",
+    early_start: bool = True,
+    pool: str = "dedicated",
+    availability: Callable | None = None,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> EngineResult:
+    """Evaluate every job under every policy in every market scenario.
+
+    Returns an ``EngineResult`` whose ``unit_cost[s]`` is the (J, P) TOLA
+    cost matrix for scenario s; per-cell cost decompositions and per-policy
+    self-owned stats ride along. ``markets`` may be one ``SpotMarket`` or a
+    sequence of scenario markets sharing a slot grid (see
+    ``engine.scenarios``).
+
+    ``pool`` selects the self-owned semantics: "dedicated" is the
+    counterfactual evaluator (TOLA / Alg. 4 scoring, optionally against a
+    realized ``availability`` query), "shared" replays the chronological
+    shared-pool allocation per policy (fixed-policy sweep semantics of
+    ``run_jobs``). ``interpret`` forces/forbids pallas interpret mode
+    (default: interpret off-TPU).
+    """
+    if not jobs:
+        raise ValueError("need at least one job")
+    policies = list(policies)
+    if not policies:
+        raise ValueError("need at least one policy")
+    single = isinstance(markets, SpotMarket)
+    market_list = [markets] if single else list(markets)
+    if not market_list:
+        raise ValueError("need at least one market scenario")
+    check_scenarios(market_list)
+
+    backend = resolve_backend(backend)
+    gplan = build_grid_plan(
+        jobs, policies, r_total, windows=windows, selfowned=selfowned,
+        pool=pool, availability=availability,
+        slots_per_unit=market_list[0].slots_per_unit)
+
+    S, J, P = len(market_list), gplan.n_jobs, gplan.n_policies
+    out = {k: np.zeros((S, J, P)) for k in
+           ("spot_cost", "ondemand_cost", "spot_work", "ondemand_work")}
+    if backend == "numpy":
+        from repro.engine import backend_numpy
+        backend_numpy.run(gplan, market_list, early_start, out)
+    elif backend == "jax":
+        from repro.engine import backend_jax
+        backend_jax.run(gplan, market_list, early_start, out)
+    else:
+        from repro.engine import backend_pallas
+        backend_pallas.run(gplan, market_list, early_start, out,
+                           interpret=interpret)
+
+    selfowned_work = np.zeros((J, P))
+    selfowned_reserved = np.zeros((J, P))
+    for g in gplan.groups:
+        selfowned_work[:, g.policy_idx] = g.selfowned_work[:, None]
+        selfowned_reserved[:, g.policy_idx] = g.selfowned_reserved[:, None]
+
+    total = out["spot_cost"] + out["ondemand_cost"]
+    unit = total / np.maximum(gplan.workload, 1e-12)[None, :, None]
+    return EngineResult(
+        unit_cost=unit,
+        spot_cost=out["spot_cost"],
+        ondemand_cost=out["ondemand_cost"],
+        spot_work=out["spot_work"],
+        ondemand_work=out["ondemand_work"],
+        workload=gplan.workload.copy(),
+        selfowned_work=selfowned_work,
+        selfowned_reserved=selfowned_reserved,
+        backend=backend,
+        single_market=single,
+    )

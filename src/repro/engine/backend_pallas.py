@@ -1,0 +1,75 @@
+"""Pallas-kernel backend — the TPU fast path.
+
+Early-start grids go through ``kernels/policy_cost.py::policy_cost_chain``:
+ONE kernel launch per bid covers the whole (scenario x policy x job) grid —
+scenarios are a grid dimension selecting the VMEM-resident cumulative
+arrays, (policy, job) cells are flattened rows, and the chain recurrence
+runs inside the kernel. Planned-start grids (early_start=False) use the
+original per-task ``policy_cost`` kernel on the flattened task batch.
+
+Off-TPU the kernels run in interpret mode (slow, parity-testing only);
+``interpret`` can be forced either way.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.engine.scenarios import stack_views
+
+__all__ = ["run"]
+
+
+def run(gplan, markets, early_start: bool, out, interpret: bool | None = None,
+        block_rows: int = 128) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.policy_cost import policy_cost, policy_cost_chain
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    slot = markets[0].slot
+    p_od = markets[0].p_ondemand
+    J = gplan.n_jobs
+    S = len(markets)
+
+    for bid in gplan.bids:
+        groups = gplan.groups_for_bid(bid)
+        A, C = stack_views(markets, bid)        # (S, n_slots+1)
+        ends = np.concatenate([g.plan.ends for g in groups])
+        z_t = np.concatenate([g.z_t for g in groups])
+        d_eff = np.concatenate([g.d_eff for g in groups])
+        if early_start:
+            pins = np.concatenate([g.pins for g in groups])
+            arrival = np.tile(gplan.arrival, len(groups))
+            res = policy_cost_chain(
+                A, C, arrival, ends, z_t, d_eff, pins, slot=slot, p_od=p_od,
+                block_rows=block_rows, interpret=interpret)
+            vals = {k: np.asarray(v, np.float64).reshape(
+                        S, len(groups), J) for k, v in res.items()}
+        else:
+            starts = np.concatenate([g.plan.starts for g in groups])
+            R, L = ends.shape
+            flat = lambda a: jnp.asarray(a.reshape(R * L), jnp.float32)
+            per_s = []
+            for s in range(S):
+                r = policy_cost(
+                    jnp.asarray(A[s], jnp.float32),
+                    jnp.asarray(C[s], jnp.float32),
+                    flat(starts), flat(ends), flat(z_t), flat(d_eff),
+                    slot=slot, p_od=p_od, interpret=interpret)
+                r["ondemand_work"] = (
+                    r["ondemand_cost"] / p_od if p_od > 0
+                    else jnp.maximum(flat(z_t) - r["spot_work"], 0.0)
+                    * (flat(z_t) > 1e-15))
+                per_s.append({k: np.asarray(v, np.float64)
+                              .reshape(len(groups), J, L).sum(axis=2)
+                              for k, v in r.items() if k != "finish"})
+            vals = {k: np.stack([p[k] for p in per_s])
+                    for k in per_s[0]}
+        for key in ("spot_cost", "ondemand_cost", "spot_work",
+                    "ondemand_work"):
+            v = vals[key]
+            for gi, g in enumerate(groups):
+                out[key][:, :, g.policy_idx] = v[:, gi, :, None]

@@ -1,0 +1,172 @@
+"""Plan layer of the evaluation engine.
+
+Turns (jobs x policies) into a deduplicated batch of *evaluation groups*.
+The key observation: the padded ``PlanBatch`` (the canonical interchange
+type, built by ``build_plans``/``window_sizes``) depends on a policy only
+through its Dealloc parameter, the self-owned allocation only through
+(plan, beta_0), and the market realization additionally through the bid.
+Policies sharing the triple (window key, beta_0, bid) are therefore EXACT
+duplicates of one another and collapse into one group — the paper's
+C1 x C2 x B grid of 175 policies reduces to 35 distinct evaluations
+because every beta >= beta_0 drives Dealloc with beta_0 (Alg. 2 lines 1-5).
+
+Every backend (numpy / jax / pallas) consumes the same ``GridPlan``; all
+market-independent arithmetic (self-owned counts, cloud residual workloads,
+pins) happens here exactly once, in float64 numpy, so backends only differ
+in how they realize the spot market.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.scheduler import (
+    PlanBatch,
+    Policy,
+    _allocate_pool,
+    _selfowned_counts_vec,
+    build_plans,
+)
+from repro.core.types import ChainJob
+
+__all__ = ["EvalGroup", "GridPlan", "build_grid_plan"]
+
+
+@dataclasses.dataclass
+class EvalGroup:
+    """One distinct (window plan, beta_0, bid) evaluation cell.
+
+    ``policy_idx`` lists every policy of the original grid that this group
+    realizes; all (J, L) arrays are market-independent.
+    """
+
+    plan: PlanBatch
+    policy_idx: np.ndarray   # (k,) columns of the cost matrix this fills
+    bid: float
+    r_alloc: np.ndarray      # (J, L) self-owned instances per task
+    z_t: np.ndarray          # (J, L) cloud workload after self-owned
+    d_eff: np.ndarray        # (J, L) cloud parallelism after self-owned
+    pins: np.ndarray         # (J, L) bool — tasks holding reservations
+    selfowned_work: np.ndarray      # (J,)
+    selfowned_reserved: np.ndarray  # (J,)
+
+
+@dataclasses.dataclass
+class GridPlan:
+    """The full batched evaluation plan for (jobs x policies)."""
+
+    jobs: list[ChainJob]
+    policies: list[Policy]
+    groups: list[EvalGroup]
+    workload: np.ndarray     # (J,) Z_j
+    arrival: np.ndarray      # (J,)
+    n_jobs: int
+    n_policies: int
+    L: int
+
+    @property
+    def bids(self) -> list[float]:
+        return sorted({g.bid for g in self.groups})
+
+    def groups_for_bid(self, bid: float) -> list[EvalGroup]:
+        return [g for g in self.groups if g.bid == bid]
+
+
+def _window_key(policy: Policy, r_total: int, windows: str):
+    if windows == "even":
+        return ("even",)
+    return ("dealloc", round(policy.dealloc_param(r_total), 12))
+
+
+def _cloud_residuals(plan: PlanBatch, r_alloc: np.ndarray):
+    """The market-independent tail of ``_simulate_plan``: residual cloud
+    workload (dust-killed), effective parallelism, pins, self-owned stats."""
+    sizes = plan.sizes
+    z_t = np.maximum(plan.z - r_alloc * sizes, 0.0)
+    z_t[z_t <= 1e-9 * (plan.z + 1.0)] = 0.0
+    d_eff = np.maximum(plan.delta - r_alloc, 0.0)
+    selfowned = np.minimum(r_alloc * sizes, plan.z)
+    return z_t, d_eff, r_alloc > 0, selfowned.sum(axis=1), \
+        (r_alloc * sizes).sum(axis=1)
+
+
+def build_grid_plan(
+    jobs: list[ChainJob],
+    policies: list[Policy],
+    r_total: int = 0,
+    windows: str = "dealloc",
+    selfowned: str = "prop12",
+    pool: str = "dedicated",
+    availability=None,
+    slots_per_unit: int = 12,
+) -> GridPlan:
+    """Deduplicate (jobs x policies) into evaluation groups.
+
+    ``pool="dedicated"`` scores each policy against an uncontended pool (the
+    counterfactual evaluator TOLA uses; ``availability`` optionally replaces
+    the constant ``r_total`` with a realized residual-occupancy query).
+    ``pool="shared"`` replays the chronological shared-pool allocation per
+    policy (the realized ``run_jobs`` semantics used by fixed-policy sweeps).
+    """
+    if pool not in ("dedicated", "shared"):
+        raise ValueError(f"unknown pool mode {pool!r}")
+    J = len(jobs)
+    plans: dict[tuple, PlanBatch] = {}
+    alloc: dict[tuple, np.ndarray] = {}
+    group_of: dict[tuple, EvalGroup] = {}
+    groups: list[EvalGroup] = []
+    for pi, pol in enumerate(policies):
+        wkey = _window_key(pol, r_total, windows)
+        if wkey not in plans:
+            plans[wkey] = build_plans(jobs, pol, r_total, windows)
+        plan = plans[wkey]
+        b0 = None if pol.beta0 is None else round(pol.beta0, 12)
+        akey = wkey + (b0,)
+        if akey not in alloc:
+            alloc[akey] = _group_alloc(plan, pol, r_total, selfowned, pool,
+                                       availability, slots_per_unit)
+        gkey = akey + (round(pol.bid, 12),)
+        if gkey in group_of:
+            group_of[gkey].policy_idx = np.append(
+                group_of[gkey].policy_idx, pi)
+            continue
+        r_alloc = alloc[akey]
+        z_t, d_eff, pins, so_work, so_res = _cloud_residuals(plan, r_alloc)
+        g = EvalGroup(plan=plan, policy_idx=np.array([pi]), bid=pol.bid,
+                      r_alloc=r_alloc, z_t=z_t, d_eff=d_eff, pins=pins,
+                      selfowned_work=so_work, selfowned_reserved=so_res)
+        group_of[gkey] = g
+        groups.append(g)
+    some_plan = next(iter(plans.values()))
+    return GridPlan(jobs=jobs, policies=policies, groups=groups,
+                    workload=some_plan.workload,
+                    arrival=some_plan.arrival, n_jobs=J,
+                    n_policies=len(policies), L=some_plan.z.shape[1])
+
+
+def _group_alloc(plan: PlanBatch, pol: Policy, r_total: int, selfowned: str,
+                 pool: str, availability, slots_per_unit: int) -> np.ndarray:
+    if r_total <= 0:
+        return np.zeros_like(plan.z)
+    beta0 = np.full(plan.z.shape[0],
+                    np.nan if pol.beta0 is None else pol.beta0)
+    if pool == "shared":
+        # Chronological shared-pool replay on the planned windows; each
+        # policy of a sweep owns a fresh pool (sweep semantics of run_jobs).
+        # bid is deliberately NaN: the allocation is bid-independent (and is
+        # cached per (windows, beta0) across bids) — if _allocate_pool ever
+        # starts consulting the bid, this surfaces loudly and the alloc
+        # cache key must gain the bid.
+        pplan = dataclasses.replace(plan, beta0=beta0,
+                                    bid=np.full(plan.z.shape[0], np.nan))
+        r_alloc, _ = _allocate_pool(pplan, r_total, selfowned, slots_per_unit)
+        return r_alloc
+    if availability is None:
+        avail = float(r_total)
+    else:
+        avail = availability(plan.starts, plan.ends)
+    r_alloc = _selfowned_counts_vec(
+        plan.z, plan.delta, plan.sizes, beta0[:, None], avail, selfowned)
+    return np.where(plan.mask, r_alloc, 0.0)

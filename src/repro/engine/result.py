@@ -1,0 +1,74 @@
+"""Result container for the batched evaluation engine."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.scheduler import StreamCosts
+
+__all__ = ["EngineResult"]
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """Batched (scenario x job x policy) evaluation output.
+
+    ``unit_cost[s, j, p]`` is the per-unit-workload cost of job j under
+    policy p in market scenario s — the TOLA counterfactual cost matrix is
+    ``unit_cost[s]``. The cost decomposition is kept per cell so callers can
+    reconstruct full ``StreamCosts`` for any (scenario, policy) without
+    re-simulating.
+    """
+
+    unit_cost: np.ndarray          # (S, J, P)
+    spot_cost: np.ndarray          # (S, J, P)
+    ondemand_cost: np.ndarray      # (S, J, P)
+    spot_work: np.ndarray          # (S, J, P)
+    ondemand_work: np.ndarray      # (S, J, P)
+    workload: np.ndarray           # (J,)
+    selfowned_work: np.ndarray     # (J, P) — market-independent
+    selfowned_reserved: np.ndarray  # (J, P)
+    backend: str = "numpy"
+    single_market: bool = False    # True when the caller passed one market
+
+    @property
+    def n_scenarios(self) -> int:
+        return self.unit_cost.shape[0]
+
+    @property
+    def total_cost(self) -> np.ndarray:
+        return self.spot_cost + self.ondemand_cost
+
+    @property
+    def matrix(self) -> np.ndarray:
+        """(J, P) unit-cost matrix — requires a single scenario."""
+        if self.unit_cost.shape[0] != 1:
+            raise ValueError(
+                f"matrix is ambiguous over {self.unit_cost.shape[0]} "
+                "scenarios; index unit_cost[s] explicitly")
+        return self.unit_cost[0]
+
+    def avg_unit_cost(self) -> np.ndarray:
+        """alpha[s, p] = sum_j c_j / sum_j Z_j (paper Section 6.1)."""
+        return self.total_cost.sum(axis=1) / self.workload.sum()
+
+    def best(self, s: int | None = None) -> tuple[int, float]:
+        """(policy index, alpha) minimizing the (scenario-mean) stream cost."""
+        alpha = self.avg_unit_cost()
+        a = alpha.mean(axis=0) if s is None else alpha[s]
+        p = int(np.argmin(a))
+        return p, float(a[p])
+
+    def stream_costs(self, p: int, s: int = 0) -> StreamCosts:
+        """Per-job StreamCosts of policy p in scenario s."""
+        return StreamCosts(
+            spot_cost=self.spot_cost[s, :, p].copy(),
+            ondemand_cost=self.ondemand_cost[s, :, p].copy(),
+            spot_work=self.spot_work[s, :, p].copy(),
+            ondemand_work=self.ondemand_work[s, :, p].copy(),
+            selfowned_work=self.selfowned_work[:, p].copy(),
+            workload=self.workload.copy(),
+            selfowned_reserved=self.selfowned_reserved[:, p].copy(),
+        )

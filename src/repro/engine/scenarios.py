@@ -1,0 +1,104 @@
+"""Scenario layer — families of spot-market traces for batched evaluation.
+
+A *scenario* is one realized spot-price path; the engine evaluates the whole
+(policy x job) grid against S scenarios in a single pass (the scenario axis
+is a batch dimension for the jax backend and a grid dimension for the pallas
+kernel). Three families:
+
+* ``fresh``  — i.i.d. redraws of the paper's price law under new seeds
+  (sampling noise of the market itself);
+* ``regime`` — the price-law mean swept across a range (regime shifts:
+  cheap/expensive spot epochs), exercising policies under markets their
+  beta grid was not tuned for;
+* ``replay`` — recorded per-slot traces wrapped via
+  ``SpotMarket.from_prices`` (the replay-trace adapter).
+
+All scenarios of a batch share the slot grid and horizon so their cumulative
+arrays stack into one (S, n_slots+1) tensor.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.market import PRICE_HI, SpotMarket
+
+__all__ = ["make_scenarios", "replay_scenarios", "check_scenarios",
+           "stack_views"]
+
+
+def make_scenarios(
+    horizon_units: float,
+    n_scenarios: int,
+    seed: int = 0,
+    kind: str = "fresh",
+    price_model: str = "shifted",
+    mean_range: tuple[float, float] = (0.125, 0.22),
+) -> list[SpotMarket]:
+    """Build S markets over a common horizon.
+
+    ``kind="fresh"``: same price law, seeds seed..seed+S-1.
+    ``kind="regime"``: price mean swept linearly over ``mean_range`` (one
+    regime per scenario, fresh seed each) — with ``price_model="truncate"``
+    this is the truncated-exp regime sweep; the default "shifted" model keeps
+    the paper's reading of the price law (DESIGN.md §4).
+    """
+    if n_scenarios < 1:
+        raise ValueError("need at least one scenario")
+    if kind == "fresh":
+        return [SpotMarket(horizon_units, seed=seed + s,
+                           price_model=price_model)
+                for s in range(n_scenarios)]
+    if kind == "regime":
+        means = np.linspace(*mean_range, n_scenarios)
+        return [SpotMarket(horizon_units, seed=seed + s,
+                           price_mean=float(means[s]),
+                           price_model=price_model)
+                for s in range(n_scenarios)]
+    raise ValueError(f"unknown scenario kind {kind!r}")
+
+
+def replay_scenarios(
+    traces: Sequence[np.ndarray],
+    slots_per_unit: int = 12,
+    p_ondemand: float = 1.0,
+) -> list[SpotMarket]:
+    """Replay-trace adapter: one scenario per recorded per-slot price trace.
+
+    Traces are right-padded with the on-demand price (spot never clears) to
+    the longest trace so all scenarios share one slot grid.
+    """
+    if not traces:
+        raise ValueError("need at least one trace")
+    n = max(len(t) for t in traces)
+    markets = []
+    for t in traces:
+        t = np.asarray(t, dtype=np.float64)
+        if len(t) < n:
+            t = np.concatenate([t, np.full(n - len(t), max(PRICE_HI,
+                                                           p_ondemand))])
+        markets.append(SpotMarket.from_prices(t, slots_per_unit=slots_per_unit,
+                                              p_ondemand=p_ondemand))
+    return markets
+
+
+def check_scenarios(markets: Sequence[SpotMarket]) -> None:
+    """Scenarios of one batch must share the slot grid and horizon."""
+    m0 = markets[0]
+    for m in markets[1:]:
+        if m.n_slots != m0.n_slots or m.slots_per_unit != m0.slots_per_unit:
+            raise ValueError(
+                "scenario markets must share slot grid and horizon "
+                f"(got n_slots {m.n_slots} vs {m0.n_slots})")
+        if abs(m.p_ondemand - m0.p_ondemand) > 1e-12:
+            raise ValueError("scenario markets must share p_ondemand")
+
+
+def stack_views(markets: Sequence[SpotMarket], bid: float):
+    """(S, n_slots+1) stacked A/C cumulative arrays for one bid."""
+    check_scenarios(markets)
+    A = np.stack([m.view(bid).A_cum for m in markets])
+    C = np.stack([m.view(bid).C_cum for m in markets])
+    return A, C

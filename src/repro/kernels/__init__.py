@@ -4,7 +4,10 @@
                     sliding window + meta-token prefix)
   ssd_scan        — Mamba-2 SSD chunked scan (grid-carried chunk state)
   policy_cost     — the paper's TOLA scoring hot loop (batched closed-form
-                    task-cost evaluation over the market's cumulative arrays)
+                    task-cost evaluation over the market's cumulative
+                    arrays); policy_cost_chain extends it to whole
+                    (scenario x policy x job) grids — one launch per bid,
+                    chain recurrence in-kernel (repro.engine's fast path)
 
 Each kernel has a pure-jnp oracle in ref.py (structurally different
 algorithm) and a jit'd wrapper in ops.py; validated in interpret mode on CPU.

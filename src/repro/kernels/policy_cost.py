@@ -29,7 +29,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["policy_cost"]
+from repro.core.simulate import FLEX_ABS as _FLEX_ABS
+from repro.core.simulate import FLEX_REL as _FLEX_REL
+
+__all__ = ["policy_cost", "policy_cost_chain"]
 
 _CHUNK = 2048
 
@@ -91,9 +94,15 @@ def _kernel(A_ref, C_ref, H_ref, start_ref, end_ref, z_ref, d_ref,
     iA = jnp.clip(cntA, 1, n_slots)
     (h_prev, a_prev), _ = gathers_and_counts([(iH - 1, 2), (iA - 1, 0)], [],
                                              refs)
+    # Flexibility epsilon (same constants as core.simulate.FLEX_REL /
+    # FLEX_ABS): zero-slack tasks must turn at start deterministically in f32.
+    no_flex = (end - start) - need <= jnp.maximum(
+        jnp.float32(1e-15),
+        jnp.maximum(_FLEX_REL * (end - start), _FLEX_ABS * end))
     t_turn = (iH - 1).astype(jnp.float32) * slot + (h_target - h_prev)
-    t_turn = jnp.where(h_target <= H0 + 1e-15, start, t_turn)
-    t_turn = jnp.where(cntH > n_slots, jnp.inf, t_turn)
+    t_turn = jnp.where(no_flex, start, t_turn)
+    t_turn = jnp.where(jnp.logical_and(cntH > n_slots, ~no_flex),
+                       jnp.inf, t_turn)
     t_fin = (iA - 1).astype(jnp.float32) * slot + (a_target - a_prev)
     t_fin = jnp.where(a_target <= 0.0, 0.0, t_fin)
     t_fin = jnp.where(cntA > n_slots, jnp.inf, t_fin)
@@ -170,3 +179,174 @@ def policy_cost(A_cum, C_cum, start, end, z_t, d_eff, *,
     del boundaries_last
     return {"spot_cost": sc, "ondemand_cost": oc, "spot_work": sw,
             "finish": fin}
+
+
+def _chain_kernel(A_ref, C_ref, H_ref, arr_ref, ends_ref, z_ref, d_ref,
+                  pin_ref, sc_ref, oc_ref, sw_ref, ow_ref, *,
+                  n_slots: int, n_pad: int, L: int, slot: float, p_od: float,
+                  BT: int):
+    nch = n_pad // _CHUNK
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (BT, _CHUNK), 1)
+
+    def gathers_and_counts(idx_list, count_targets):
+        """Same chunked comparison-count / one-hot-gather pass as `_kernel`,
+        over the (1, n_pad) scenario slice this grid cell owns."""
+        def body(c, carry):
+            g_acc, c_acc = carry
+            base = c * _CHUNK
+            chunks = [r[0, pl.dslice(base * 0 + base, _CHUNK)]
+                      for r in (A_ref, C_ref, H_ref)]
+            g_new = []
+            for (idx, ref_i), acc in zip(idx_list, g_acc):
+                oh = jnp.where(iota_c == (idx[:, None] - base), 1.0, 0.0)
+                g_new.append(acc + oh @ chunks[ref_i])
+            c_new = []
+            for (tgt, ref_i), acc in zip(count_targets, c_acc):
+                c_new.append(acc + jnp.sum(
+                    (chunks[ref_i][None, :] < tgt[:, None]).astype(jnp.int32),
+                    axis=1))
+            return g_new, c_new
+        g0 = [jnp.zeros((BT,), jnp.float32) for _ in idx_list]
+        c0 = [jnp.zeros((BT,), jnp.int32) for _ in count_targets]
+        return jax.lax.fori_loop(0, nch, body, (g0, c0))
+
+    def step(k, carry):
+        cur, sc, oc, sw, ow = carry
+        end = ends_ref[pl.dslice(k, 1), :][0]
+        z_raw = z_ref[pl.dslice(k, 1), :][0]
+        d_eff = jnp.maximum(d_ref[pl.dslice(k, 1), :][0], 0.0)
+        pin = pin_ref[pl.dslice(k, 1), :][0] > 0.5
+        # Early-start chain semantics (simulate_chains_early): the task runs
+        # in [min(cur, end), end]; tasks whose window already elapsed carry
+        # no cloud work.
+        live = end > cur - 1e-15
+        start = jnp.minimum(cur, end)
+        z_t = jnp.where(live, z_raw, 0.0)
+        d_safe = jnp.where(d_eff > 0, d_eff, 1.0)
+        need = z_t / d_safe
+
+        k0 = jnp.clip((start / slot).astype(jnp.int32), 0, n_slots - 1)
+        (a_k0, a_k1, c_k0, c_k1), _ = gathers_and_counts(
+            [(k0, 0), (k0 + 1, 0), (k0, 1), (k0 + 1, 1)], [])
+        frac = start - k0.astype(jnp.float32) * slot
+        A0 = a_k0 + (a_k1 - a_k0) / slot * frac
+        C0 = c_k0 + (c_k1 - c_k0) / slot * frac
+        H0 = start - A0
+
+        h_target = H0 + (end - start) - need
+        a_target = A0 + need
+        _, (cntH, cntA) = gathers_and_counts(
+            [], [(h_target, 2), (a_target, 0)])
+        iH = jnp.clip(cntH, 1, n_slots)
+        iA = jnp.clip(cntA, 1, n_slots)
+        (h_prev, a_prev), _ = gathers_and_counts(
+            [(iH - 1, 2), (iA - 1, 0)], [])
+        no_flex = (end - start) - need <= jnp.maximum(
+            jnp.float32(1e-15),
+            jnp.maximum(_FLEX_REL * (end - start), _FLEX_ABS * end))
+        t_turn = (iH - 1).astype(jnp.float32) * slot + (h_target - h_prev)
+        t_turn = jnp.where(no_flex, start, t_turn)
+        t_turn = jnp.where(jnp.logical_and(cntH > n_slots, ~no_flex),
+                           jnp.inf, t_turn)
+        t_fin = (iA - 1).astype(jnp.float32) * slot + (a_target - a_prev)
+        t_fin = jnp.where(a_target <= 0.0, 0.0, t_fin)
+        t_fin = jnp.where(cntA > n_slots, jnp.inf, t_fin)
+
+        on_spot = t_fin <= t_turn
+        t_end = jnp.minimum(jnp.where(on_spot, t_fin, t_turn), end)
+        ke = jnp.clip((t_end / slot).astype(jnp.int32), 0, n_slots - 1)
+        (a_e0, a_e1, c_e0, c_e1), _ = gathers_and_counts(
+            [(ke, 0), (ke + 1, 0), (ke, 1), (ke + 1, 1)], [])
+        frace = t_end - ke.astype(jnp.float32) * slot
+        A_end = a_e0 + (a_e1 - a_e0) / slot * frace
+        C_end = c_e0 + (c_e1 - c_e0) / slot * frace
+
+        active = z_t > 1e-15
+        spot_work = jnp.minimum(d_eff * jnp.maximum(A_end - A0, 0.0), z_t)
+        spot_cost = d_eff * jnp.maximum(C_end - C0, 0.0)
+        od_work = z_t - spot_work
+        zeros = jnp.zeros_like(z_t)
+        sc = sc + jnp.where(active, spot_cost, zeros)
+        oc = oc + jnp.where(active, p_od * od_work, zeros)
+        sw = sw + jnp.where(active, spot_work, zeros)
+        ow = ow + jnp.where(active, od_work, zeros)
+        fin = jnp.where(active, jnp.where(on_spot, t_fin, end), start)
+        fin = jnp.where(pin, end, fin)
+        moved = (z_raw > 1e-15) | pin
+        cur = jnp.where(moved, fin, cur)
+        return cur, sc, oc, sw, ow
+
+    zeros = jnp.zeros((BT,), jnp.float32)
+    carry = (arr_ref[...], zeros, zeros, zeros, zeros)
+    _, sc, oc, sw, ow = jax.lax.fori_loop(0, L, step, carry)
+    sc_ref[0, :] = sc
+    oc_ref[0, :] = oc
+    sw_ref[0, :] = sw
+    ow_ref[0, :] = ow
+
+
+def policy_cost_chain(A_cum, C_cum, arrival, ends, z_t, d_eff, pins, *,
+                      slot: float = 1.0 / 12.0, p_od: float = 1.0,
+                      block_rows: int = 128, interpret: bool = False):
+    """Batched early-start CHAIN costs for one bid, over S market scenarios.
+
+    The grid-evaluation extension of ``policy_cost``: instead of one call per
+    (policy, job-block) with externally-sequenced chain steps, the whole
+    (scenario x policy x job) grid for a bid is ONE kernel launch — rows are
+    flattened (policy, job) cells, the chain recurrence over the L planned
+    windows runs inside the kernel (fori_loop carrying the realized start),
+    and the scenario axis is a grid dimension selecting which cumulative
+    arrays are resident in VMEM.
+
+    A_cum/C_cum: (S, n_slots+1) scenario-stacked cumulative arrays (one bid);
+    arrival: (R,); ends/z_t/d_eff: (R, L) padded plans; pins: (R, L) bool
+    (self-owned reservations pin the realized finish to the planned end).
+    Returns dict of (S, R) per-row aggregates.
+    """
+    A_cum = jnp.atleast_2d(jnp.asarray(A_cum, jnp.float32))
+    C_cum = jnp.atleast_2d(jnp.asarray(C_cum, jnp.float32))
+    S, n1 = A_cum.shape
+    n_slots = n1 - 1
+    R, L = ends.shape
+    BT = min(block_rows, max(R, 8))
+    pt = (-R) % BT
+    arrival = jnp.pad(jnp.asarray(arrival, jnp.float32), (0, pt))
+    pad2 = lambda a: jnp.pad(jnp.asarray(a, jnp.float32), ((0, pt), (0, 0)))
+    ends_p, z_p, d_p = map(pad2, (ends, z_t, d_eff))
+    pins_p = pad2(jnp.asarray(pins, jnp.float32))
+    # (L, R) layout: the chain loop slices the major dim per step.
+    ends_p, z_p, d_p, pins_p = (a.T for a in (ends_p, z_p, d_p, pins_p))
+
+    H_cum = jnp.arange(n1, dtype=jnp.float32) * slot - A_cum
+    n_pad = ((n1 + _CHUNK - 1) // _CHUNK) * _CHUNK
+    padv = n_pad - n1
+    big = jnp.float32(3.4e38)
+    pad_s = lambda a: jnp.pad(a, ((0, 0), (0, padv)), constant_values=big)
+    A_p, C_p, H_p = pad_s(A_cum), pad_s(C_cum), pad_s(H_cum)
+
+    kernel = functools.partial(
+        _chain_kernel, n_slots=n_slots, n_pad=n_pad, L=L, slot=slot,
+        p_od=p_od, BT=BT)
+    n_blocks = (R + pt) // BT
+    outs = pl.pallas_call(
+        kernel,
+        grid=(S, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, n_pad), lambda s, i: (s, 0)),
+            pl.BlockSpec((1, n_pad), lambda s, i: (s, 0)),
+            pl.BlockSpec((1, n_pad), lambda s, i: (s, 0)),
+            pl.BlockSpec((BT,), lambda s, i: (i,)),
+            pl.BlockSpec((L, BT), lambda s, i: (0, i)),
+            pl.BlockSpec((L, BT), lambda s, i: (0, i)),
+            pl.BlockSpec((L, BT), lambda s, i: (0, i)),
+            pl.BlockSpec((L, BT), lambda s, i: (0, i)),
+        ],
+        out_specs=[pl.BlockSpec((1, BT), lambda s, i: (s, i))
+                   for _ in range(4)],
+        out_shape=[jax.ShapeDtypeStruct((S, R + pt), jnp.float32)
+                   for _ in range(4)],
+        interpret=interpret,
+    )(A_p, C_p, H_p, arrival, ends_p, z_p, d_p, pins_p)
+    sc, oc, sw, ow = [o[:, :R] for o in outs]
+    return {"spot_cost": sc, "ondemand_cost": oc, "spot_work": sw,
+            "ondemand_work": ow}

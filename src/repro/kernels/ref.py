@@ -11,7 +11,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["attention_ref", "ssd_ref", "policy_cost_ref"]
+from repro.core.simulate import FLEX_ABS, FLEX_REL
+
+__all__ = ["attention_ref", "ssd_ref", "policy_cost_ref", "chain_costs_ref"]
 
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
@@ -67,15 +69,13 @@ def ssd_ref(x, dt, A, B, C, init_state=None):
     return jnp.moveaxis(ys, 0, 1), state
 
 
-def policy_cost_ref(A_cum, C_cum, start, end, z_t, d_eff, p_od=1.0):
-    """Closed-form per-task spot/on-demand costs (mirrors
-    repro.core.simulate.simulate_tasks, jnp edition).
+def _task_sim(A_cum, C_cum, start, end, z_t, d_eff, slot, p_od):
+    """Closed-form task sim on one bid's cumulative arrays (jnp, batched).
 
-    A_cum/C_cum: (n_slots+1,) cumulative availability / spot-payment arrays
-    on the slot grid (slot length = 1/12); boundaries are implicit
-    (k / 12). Returns dict of per-task arrays.
+    All task arrays share one shape; ``A_cum``/``C_cum`` are (n_slots+1,).
+    Mirrors ``repro.core.simulate.simulate_tasks`` exactly (same targets,
+    same tie handling).
     """
-    slot = 1.0 / 12.0
     n = A_cum.shape[0] - 1
     horizon = n * slot
     boundaries = jnp.arange(n + 1) * slot
@@ -89,7 +89,8 @@ def policy_cost_ref(A_cum, C_cum, start, end, z_t, d_eff, p_od=1.0):
         return cum[k] + slope * frac
 
     def invert(cum, target):
-        k = jnp.searchsorted(cum, target, side="left")
+        k = jnp.searchsorted(cum, target.ravel(), side="left").reshape(
+            target.shape)
         k = jnp.clip(k, 1, n)
         return jnp.where(target <= cum[0], boundaries[0],
                          boundaries[k - 1] + (target - cum[k - 1]))
@@ -97,24 +98,80 @@ def policy_cost_ref(A_cum, C_cum, start, end, z_t, d_eff, p_od=1.0):
     active = z_t > 1e-15
     d_safe = jnp.where(d_eff > 0, d_eff, 1.0)
     need = z_t / d_safe
-    A0 = jax.vmap(lambda t: interp(A_cum, t))(start)
-    C0 = jax.vmap(lambda t: interp(C_cum, t))(start)
+    A0 = interp(A_cum, start)
+    C0 = interp(C_cum, start)
     H0 = start - A0
     h_target = H0 + (end - start) - need
-    t_turn = jnp.where(h_target <= H0 + 1e-15, start,
-                       jax.vmap(lambda x: invert(H_cum, x))(h_target))
-    t_fin = jax.vmap(lambda x: invert(A_cum, x))(A0 + need)
+    # Flexibility epsilon: zero-slack tasks (z == d * window, an atom under
+    # Dealloc) must turn at start in every backend regardless of float
+    # rounding — the oracle's constants, applied identically.
+    no_flex = (end - start) - need <= jnp.maximum(
+        1e-15, jnp.maximum(FLEX_REL * (end - start), FLEX_ABS * end))
+    t_turn = jnp.where(no_flex, start, invert(H_cum, h_target))
+    t_fin = invert(A_cum, A0 + need)
     on_spot = t_fin <= t_turn
     t_end = jnp.minimum(jnp.where(on_spot, t_fin, t_turn), end)
-    spot_avail = jnp.maximum(jax.vmap(lambda t: interp(A_cum, t))(t_end) - A0, 0.0)
+    spot_avail = jnp.maximum(interp(A_cum, t_end) - A0, 0.0)
     spot_work = jnp.minimum(d_eff * spot_avail, z_t)
-    spot_cost = d_eff * jnp.maximum(
-        jax.vmap(lambda t: interp(C_cum, t))(t_end) - C0, 0.0)
+    spot_cost = d_eff * jnp.maximum(interp(C_cum, t_end) - C0, 0.0)
     od_work = z_t - spot_work
     zeros = jnp.zeros_like(z_t)
     return {
         "spot_cost": jnp.where(active, spot_cost, zeros),
         "ondemand_cost": jnp.where(active, p_od * od_work, zeros),
         "spot_work": jnp.where(active, spot_work, zeros),
+        "ondemand_work": jnp.where(active, od_work, zeros),
         "finish": jnp.where(active, jnp.where(on_spot, t_fin, end), start),
     }
+
+
+def policy_cost_ref(A_cum, C_cum, start, end, z_t, d_eff, p_od=1.0,
+                    slot=1.0 / 12.0):
+    """Closed-form per-task spot/on-demand costs (mirrors
+    repro.core.simulate.simulate_tasks, jnp edition).
+
+    A_cum/C_cum: (n_slots+1,) cumulative availability / spot-payment arrays
+    on the slot grid (slot length = 1/12 by default); boundaries are implicit
+    (k * slot). Returns dict of per-task arrays.
+    """
+    return _task_sim(A_cum, C_cum, start, end, z_t, d_eff, slot, p_od)
+
+
+def chain_costs_ref(A_cum, C_cum, arrival, ends, z_t, d_eff, pins,
+                    p_od=1.0, slot=1.0 / 12.0):
+    """Early-start chain execution under one bid, batched over rows (jnp).
+
+    Mirrors ``repro.core.simulate.simulate_chains_early``: task k of each
+    row starts at its predecessor's realized finish, pinned tasks (holding
+    self-owned reservations) finish at their planned deadline. A *row* is one
+    (policy, job) cell of the evaluation grid — the batched policy axis of the
+    engine is folded into this leading dimension.
+
+    arrival: (R,); ends/z_t/d_eff: (R, L) padded plans; pins: (R, L) bool.
+    Returns per-row aggregates (spot/on-demand cost and work) plus the
+    realized chain ``finish``.
+    """
+    xs = (jnp.moveaxis(jnp.asarray(ends), 1, 0),
+          jnp.moveaxis(jnp.asarray(z_t), 1, 0),
+          jnp.moveaxis(jnp.asarray(d_eff), 1, 0),
+          jnp.moveaxis(jnp.asarray(pins), 1, 0))
+
+    def step(carry, inp):
+        cur, sc, oc, sw, ow = carry
+        end_k, z_k, d_k, pin_k = inp
+        live = end_k > cur - 1e-15
+        start_k = jnp.minimum(cur, end_k)
+        sim = _task_sim(A_cum, C_cum, start_k, end_k,
+                        jnp.where(live, z_k, 0.0),
+                        jnp.maximum(d_k, 0.0), slot, p_od)
+        fin = jnp.where(pin_k, end_k, sim["finish"])
+        moved = (z_k > 1e-15) | pin_k
+        cur = jnp.where(moved, fin, cur)
+        return (cur, sc + sim["spot_cost"], oc + sim["ondemand_cost"],
+                sw + sim["spot_work"], ow + sim["ondemand_work"]), None
+
+    zeros = jnp.zeros_like(jnp.asarray(arrival, jnp.result_type(ends)))
+    init = (jnp.asarray(arrival, zeros.dtype), zeros, zeros, zeros, zeros)
+    (cur, sc, oc, sw, ow), _ = jax.lax.scan(step, init, xs)
+    return {"spot_cost": sc, "ondemand_cost": oc, "spot_work": sw,
+            "ondemand_work": ow, "finish": cur}

@@ -13,6 +13,8 @@ from repro.launch import steps as step_lib
 from repro.models import build
 from repro.optim import AdamW
 
+pytestmark = pytest.mark.slow  # heavyweight; excluded from the fast tier-1 loop
+
 B, S = 2, 64
 
 

@@ -3,7 +3,11 @@ closed-form simulator == slot-stepping oracle, transform feasibility,
 batch Greedy == sequential Greedy."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     SpotMarket,

@@ -9,6 +9,8 @@ import pytest
 
 from repro.configs import ARCH_NAMES, SHAPES, get_config, supports
 
+pytestmark = pytest.mark.slow  # heavyweight; excluded from the fast tier-1 loop
+
 CACHE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                      "roofline_cache.json")
 

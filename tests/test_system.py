@@ -11,6 +11,8 @@ from repro.launch.serve import serve_requests
 from repro.launch.train import train_loop
 from repro.sched import FleetOrchestrator, FleetSpec, training_job_dag
 
+pytestmark = pytest.mark.slow  # heavyweight; excluded from the fast tier-1 loop
+
 
 def test_train_preempt_restart_resumes_exactly(tmp_path):
     cfg = smoke_config("tinyllama_1_1b")
