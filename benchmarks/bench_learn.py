@@ -1,0 +1,141 @@
+"""Online-learning replay throughput: numpy vs jax scan vs pallas kernel.
+
+Times ``repro.learn.replay`` — the sequential sample/observe/reweight
+recurrence of Alg. 4 and its bandit variants — over an engine-produced
+(scenarios x jobs x policies) cost tensor, batched across a learner x
+eta-grid sweep, and emits ``BENCH_learn.json``:
+
+    PYTHONPATH=src python -m benchmarks.bench_learn \
+        [--jobs 512] [--policies 70] [--scenarios 4] [--r 600] \
+        [--learners hedge exp3 ...] [--eta-grid 0.05 0.2] \
+        [--backends numpy jax] [--out BENCH_learn.json]
+
+Reported per backend: wall seconds (best of --iters after one untimed
+warmup that absorbs jit/pallas compilation), throughput in learner steps
+per second (steps = scenarios x learner instances x jobs — one sampled
+decision each), and agreement vs the first backend (fraction of sampled-
+trace mismatches, max final-weight deviation). The numpy backend is the
+sequential float64 oracle, so the ratio jax/numpy is the speedup the
+scan-compiled replay buys. ``pallas`` is opt-in off-TPU: it runs the
+weight-update kernel in interpret mode there (kernel logic, not TPU speed)
+and only covers hedge-family instances natively.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import generate_chain_jobs, selfowned_policies
+from repro.engine import evaluate_grid, make_scenarios
+from repro.learn import LEARNER_KINDS
+from repro.learn import replay as learn_replay
+from benchmarks.exp4_online_learning import comparison_specs
+
+__all__ = ["run", "main"]
+
+
+def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
+        backends: list[str], learners: list[str], eta_grid: list[float],
+        seed: int = 0, job_type: int = 2, iters: int = 2) -> dict:
+    jobs = generate_chain_jobs(n_jobs, job_type, seed=seed)
+    horizon = max(j.deadline for j in jobs) + 1.0
+    markets = make_scenarios(horizon, n_scenarios, seed=seed + 1000)
+    grid = selfowned_policies()[:n_policies]
+    if len(grid) < n_policies:
+        raise ValueError(f"policy grid has only {len(grid)} policies")
+    res = evaluate_grid(jobs, grid, markets, r_total, backend="numpy")
+    arrivals = np.array([j.arrival for j in jobs])
+    d = max(j.deadline - j.arrival for j in jobs)
+    specs = comparison_specs(learners, eta_grid)
+    steps = n_scenarios * len(specs) * n_jobs
+    out = {
+        "n_jobs": n_jobs,
+        "n_policies": len(grid),
+        "n_scenarios": n_scenarios,
+        "n_learner_instances": len(specs),
+        "learners": [sp.label for sp in specs],
+        "r_total": r_total,
+        "job_type": job_type,
+        "seed": seed,
+        "steps": steps,
+        "backends": {},
+    }
+    try:
+        import jax
+        out["jax_backend"] = jax.default_backend()
+    except Exception:
+        out["jax_backend"] = None
+
+    ref = None
+    for backend in backends:
+        times = []
+        warmup = None
+        lr = None
+        for it in range(iters + 1):
+            t0 = time.time()
+            lr = learn_replay(res, arrivals, d, learners=specs, seed=seed,
+                              backend=backend)
+            dt = time.time() - t0
+            if it == 0:          # warmup absorbs jit/pallas compilation
+                warmup = dt
+            else:
+                times.append(dt)
+        best = min(times)
+        entry = {
+            "seconds": best,
+            "warmup_seconds": warmup,
+            "steps_per_sec": steps / best,
+            # Mirrors the kernel's default: interpret iff CPU.
+            "interpret": backend == "pallas"
+            and out["jax_backend"] == "cpu",
+        }
+        out["backends"][backend] = entry
+        if ref is None:
+            ref = lr
+            entry["trace_mismatch_vs_first"] = 0.0
+            entry["weights_maxdiff_vs_first"] = 0.0
+        else:
+            entry["trace_mismatch_vs_first"] = float(
+                (lr.chosen != ref.chosen).mean())
+            entry["weights_maxdiff_vs_first"] = float(
+                np.abs(lr.weights - ref.weights).max())
+        print(f"[{backend:6s}] {best:8.3f}s  "
+              f"{steps / best / 1e3:10.1f}k steps/s  "
+              f"trace mismatch {entry['trace_mismatch_vs_first']:.2e}"
+              + ("  (interpret)" if entry["interpret"] else ""))
+    return out
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--jobs", type=int, default=512)
+    p.add_argument("--policies", type=int, default=70)
+    p.add_argument("--scenarios", type=int, default=4)
+    p.add_argument("--r", type=int, default=600)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--job-type", type=int, default=2)
+    p.add_argument("--iters", type=int, default=2)
+    p.add_argument("--learners", nargs="+", default=list(LEARNER_KINDS),
+                   choices=list(LEARNER_KINDS))
+    p.add_argument("--eta-grid", type=float, nargs="*", default=[0.05, 0.2])
+    p.add_argument("--backends", nargs="+", default=["numpy", "jax"],
+                   choices=["numpy", "jax", "pallas"],
+                   help="pallas is opt-in: off-TPU it interprets the "
+                        "weight-update kernel (logic check, not speed)")
+    p.add_argument("--out", default="BENCH_learn.json")
+    args = p.parse_args(argv)
+    res = run(args.jobs, args.policies, args.scenarios, args.r,
+              args.backends, args.learners, args.eta_grid, seed=args.seed,
+              job_type=args.job_type, iters=args.iters)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"wrote {args.out}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -83,8 +83,11 @@ def argparser(desc: str) -> argparse.ArgumentParser:
     p.add_argument("--scenarios", type=int, default=1,
                    help="market scenarios evaluated in one engine pass "
                         "(1 = the paper's single market)")
-    p.add_argument("--scenario-kind", choices=["fresh", "regime"],
-                   default="fresh")
+    p.add_argument("--scenario-kind",
+                   choices=["fresh", "regime", "adversarial"],
+                   default="fresh",
+                   help="market family (adversarial = lure/spike square "
+                        "waves driving worst-case TOLA regret)")
     p.add_argument("--backend", default="auto",
                    choices=["auto", "numpy", "jax", "pallas"],
                    help="evaluation-engine backend")

@@ -4,6 +4,13 @@ rho_bar = 1 - alpha_bar(P) / alpha_bar(P'): realized average unit cost when
 TOLA drives the proposed grid vs when it drives the benchmark grid
 (Even windows + naive self-owned, bid-only policies). Job type fixed to 2
 (paper), r in {0, 300, 600, 900, 1200}.
+
+``--learner`` swaps the online learner (hedge = the paper's Alg. 4 —
+reproduces Table 6 bit-for-bit — or any bandit learner from
+``repro.learn``); several learners and/or ``--eta-grid`` values additionally
+print a learner-comparison table, evaluated by the batched ``repro.learn``
+replay over ONE engine pass per r (counterfactual dedicated-pool regret,
+common random numbers across learners).
 """
 
 from __future__ import annotations
@@ -17,14 +24,36 @@ from repro.core import (
     selfowned_policies,
     spot_od_policies,
 )
+from repro.learn import LEARNER_KINDS, LearnerSpec, Schedule
+from repro.learn import replay as learn_replay
+
+
+def comparison_specs(learners: list[str], eta_grid: list[float]):
+    """The flat spec list of the comparison sweep: every requested learner
+    with its default (alg4) schedule, plus one variant per eta-grid point
+    for the learners that consume a learning rate."""
+    specs = []
+    for kind in learners:
+        specs.append(LearnerSpec(kind))
+        if kind in ("hedge", "exp3"):
+            for c in eta_grid:
+                specs.append(LearnerSpec(kind, eta=Schedule("const", c)))
+    return specs
 
 
 def run(n_jobs: int, rs: list[int], seed: int = 0, job_type: int = 2,
         scenarios: int = 1, scenario_kind: str = "fresh",
-        backend: str = "auto") -> dict:
+        backend: str = "auto", learners: list[str] | None = None,
+        eta_grid: list[float] | None = None) -> dict:
+    learners = learners or ["hedge"]
+    eta_grid = eta_grid or []
+    compare = len(learners) > 1 or eta_grid
     out = {}
     s = make_setup(n_jobs, job_type, seed, scenarios=scenarios,
                    scenario_kind=scenario_kind, backend=backend)
+    arrivals = np.array([j.arrival for j in s.jobs])
+    d = max(j.deadline - j.arrival for j in s.jobs)
+    Z = np.array([j.total_work for j in s.jobs])
     for r in rs:
         with Timer(f"exp4 r={r}"):
             grid = selfowned_policies() if r > 0 else spot_od_policies()
@@ -32,14 +61,15 @@ def run(n_jobs: int, rs: list[int], seed: int = 0, job_type: int = 2,
             # engine pass; the sequential replay runs per scenario.
             props = run_tola_scenarios(
                 s.jobs, grid, s.markets, r_total=r, seed=seed,
-                early_start=True, backend=backend)
+                early_start=True, backend=backend, learner=learners[0])
             benches = run_tola_scenarios(
                 s.jobs, benchmark_bid_policies(), s.markets, r_total=r,
                 windows="even", selfowned="naive", early_start=False,
-                seed=seed, backend=backend)
+                seed=seed, backend=backend, learner=learners[0])
             a_prop = np.array([p.average_unit_cost() for p in props])
             a_bench = np.array([b.average_unit_cost() for b in benches])
             out[r] = {
+                "learner": learners[0],
                 "alpha_tola": float(a_prop.mean()),
                 "alpha_bench": float(a_bench.mean()),
                 "rho_bar": 1 - float(a_prop.mean()) / float(a_bench.mean()),
@@ -51,22 +81,50 @@ def run(n_jobs: int, rs: list[int], seed: int = 0, job_type: int = 2,
             }
             if len(s.markets) > 1:
                 out[r]["alpha_tola_std"] = float(a_prop.std())
+            if compare:
+                # One batched replay of every (learner, eta) instance over
+                # the scenario-stacked cost tensor of the last iteration.
+                C = np.stack([p.cost_matrix for p in props])
+                lr = learn_replay(C, arrivals, d, workload=Z,
+                                  learners=comparison_specs(learners,
+                                                            eta_grid),
+                                  seed=seed, backend="auto")
+                out[r]["comparison"] = lr.summary()
     return out
 
 
 def main(argv=None):
     p = argparser(__doc__)
     p.set_defaults(r=[0, 300, 600, 900, 1200])
+    p.add_argument("--learner", nargs="+", default=["hedge"],
+                   choices=list(LEARNER_KINDS),
+                   help="online learner(s); the first drives the Table-6 "
+                        "realized runs, all enter the comparison table")
+    p.add_argument("--eta-grid", type=float, nargs="*", default=[],
+                   help="extra constant learning rates for the comparison "
+                        "sweep (default schedule: the paper's Alg. 4 eta_t)")
     args = p.parse_args(argv)
     res = run(args.jobs, args.r, args.seed, scenarios=args.scenarios,
-              scenario_kind=args.scenario_kind, backend=args.backend)
+              scenario_kind=args.scenario_kind, backend=args.backend,
+              learners=args.learner, eta_grid=args.eta_grid)
     rows = [[r, f"{v['alpha_tola']:.4f}", f"{v['alpha_bench']:.4f}",
              f"{v['rho_bar']:.2%}", f"{v['best_fixed']:.4f}",
              f"{v['regret']:.4f}", f"{v['top_weight']:.3f}"]
             for r, v in sorted(res.items())]
-    print_table("Table 6 — TOLA online learning (job type 2)",
+    print_table(f"Table 6 — TOLA online learning (job type 2, "
+                f"learner {args.learner[0]})",
                 ["r", "alpha_tola", "alpha_bench", "rho_bar",
                  "best_fixed", "regret", "top_weight"], rows)
+    if any("comparison" in v for v in res.values()):
+        rows = [[r, row["learner"], f"{row['realized_unit']:.4f}",
+                 f"{row['regret']:.4f}", f"{row['expected_regret']:.4f}",
+                 f"{row['top_weight']:.3f}"]
+                for r, v in sorted(res.items())
+                for row in v.get("comparison", [])]
+        print_table("Learner comparison (counterfactual dedicated-pool "
+                    "replay, common random numbers)",
+                    ["r", "learner", "alpha_cf", "regret",
+                     "expected_regret", "top_weight"], rows)
     return res
 
 

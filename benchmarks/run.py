@@ -12,6 +12,10 @@ Sections:
                     BENCH_engine.json (see benchmarks/bench_engine.py for
                     how to read it — off-TPU the pallas number is interpret
                     mode, i.e. kernel logic, not TPU speed)
+  learn           — online-learning replay throughput (numpy oracle vs the
+                    scan-compiled jax replay) across a learner x eta-grid
+                    sweep over the same grid; emits BENCH_learn.json
+                    (benchmarks/bench_learn.py)
   roofline        — per-(arch x shape) roofline terms from the compiled
                     dry-run (reads benchmarks/roofline_cache.json if the
                     dry-run sweep has been run; see launch/dryrun.py)
@@ -35,10 +39,10 @@ def main(argv=None):
                    help="small streams / reduced grids for CI-speed runs")
     p.add_argument("--skip", nargs="*", default=[],
                    choices=["exp1", "exp2", "exp3", "exp4", "engine",
-                            "roofline"])
+                            "learn", "roofline"])
     p.add_argument("--only", nargs="*", default=None,
                    choices=["exp1", "exp2", "exp3", "exp4", "engine",
-                            "roofline"])
+                            "learn", "roofline"])
     args = p.parse_args(argv)
 
     n_jobs = args.jobs or (300 if args.quick else 1500)
@@ -77,6 +81,13 @@ def main(argv=None):
                                "--scenarios", "2", "--iters", "1"])
         else:
             bench_engine.main([])
+    if want("learn"):
+        from benchmarks import bench_learn
+        if args.quick:
+            bench_learn.main(["--jobs", "128", "--policies", "64",
+                              "--scenarios", "2", "--iters", "1"])
+        else:
+            bench_learn.main([])
     if want("roofline"):
         from benchmarks import roofline
         roofline.main([])

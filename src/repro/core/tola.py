@@ -11,9 +11,13 @@ counterfactually and the weights are re-scaled with
 Implementation notes (faithful, but vectorized):
 
 * The counterfactual cost matrix ``C[j, pi]`` does not depend on the weight
-  evolution, so it is precomputed with one vectorized pass per policy
-  (``evaluate_policy_fullpool``); the sequential sample/update replay then
-  runs in O(n_jobs * n_policies) numpy.
+  evolution, so it is precomputed with one batched engine pass
+  (``repro.engine.evaluate_grid``); the sequential sample/update replay is
+  delegated to the online-learning subsystem ``repro.learn`` — the numpy
+  backend there is the exact float64 oracle, bit-compatible with the
+  original in-module event loop (same logw arithmetic, same uniform-stream
+  consumption as ``rng.choice``), and ``learner`` swaps in the bandit
+  learners (EXP3/UCB1/epsilon-greedy/FTL) of ``repro.learn.learners``.
 * Per-job losses are normalized by the job workload Z_j (the paper's own
   performance metric is cost per unit workload); unnormalized costs reach
   O(10^4) and exp(-eta*c) would underflow the weight update. This keeps
@@ -48,6 +52,7 @@ class TolaResult:
     realized: StreamCosts       # realized costs under the sampled policies
     cost_matrix: np.ndarray     # (n_jobs, n_policies) counterfactual unit costs
     fixed_unit_costs: np.ndarray  # (n_policies,) stream alpha per fixed policy
+    learn: "object | None" = None  # repro.learn.LearnResult of the last iter
 
     def average_unit_cost(self) -> float:
         return self.realized.average_unit_cost()
@@ -113,6 +118,7 @@ def run_tola(
     early_start: bool = True,
     pool_iters: int = 1,
     backend: str = "auto",
+    learner="hedge",
     _C0: np.ndarray | None = None,
 ) -> TolaResult:
     """Full Algorithm 4 over an arrival-ordered job list.
@@ -124,19 +130,25 @@ def run_tola(
     this, the learner never sees self-owned scarcity and over-rewards
     pool-hogging (small beta_0) policies.
 
-    ``backend`` selects the engine backend for the cost-matrix evaluations;
-    ``_C0`` optionally injects a precomputed iteration-0 matrix (used by
-    ``run_tola_scenarios`` to batch matrices across scenarios in one engine
-    pass).
+    ``backend`` selects the engine backend for the cost-matrix evaluations
+    (the learner replay itself always runs the float64 numpy oracle of
+    ``repro.learn`` — Hedge there is bit-compatible with the original
+    in-module loop); ``learner`` is a kind name or ``LearnerSpec`` from
+    ``repro.learn.learners``. ``_C0`` optionally injects a precomputed
+    iteration-0 matrix (used by ``run_tola_scenarios`` to batch matrices
+    across scenarios in one engine pass).
     """
+    from repro.learn import as_spec
+    from repro.learn import replay as learn_replay
+
     if not jobs or not policies:
         raise ValueError("need jobs and policies")
     arrivals = np.array([j.arrival for j in jobs])
     if np.any(np.diff(arrivals) < -1e-9):
         raise ValueError("jobs must be arrival-ordered")
-    n, m = len(jobs), len(policies)
     d = max(j.deadline - j.arrival for j in jobs)
     Z = np.array([j.total_work for j in jobs])
+    spec = as_spec(learner)
     rng = np.random.default_rng(seed)
 
     availability = None
@@ -147,24 +159,9 @@ def run_tola(
         else:
             C = cost_matrix(jobs, policies, market, r_total, windows,
                             selfowned, early_start, availability, backend)
-        logw = np.full(m, -np.log(m))
-        chosen = np.zeros(n, dtype=np.int64)
-        # Merge arrival events (sample) and update events (a_j + d).
-        events = sorted(
-            [(arrivals[j], 0, j) for j in range(n)]
-            + [(arrivals[j] + d, 1, j) for j in range(n)]
-        )
-        for t, kind, j in events:
-            if kind == 0:
-                w = np.exp(logw - logw.max())
-                w /= w.sum()
-                chosen[j] = rng.choice(m, p=w)
-            else:
-                # eta_t = sqrt(2 log n / (d (t - d))) — Alg. 4 line 16,
-                # guarded near t = d where the prefactor blows up.
-                eta = np.sqrt(2.0 * np.log(m) / (d * max(t - d, d)))
-                logw = logw - eta * C[j]
-                logw -= logw.max()
+        lr = learn_replay(C, arrivals, d, workload=Z, learners=[spec],
+                          rng=rng, backend="numpy")
+        chosen = lr.chosen[0, 0]
 
         # Realized pass: per-job sampled policies against the shared pool.
         plan = build_plans(jobs, [policies[c] for c in chosen], r_total, windows)
@@ -174,11 +171,10 @@ def run_tola(
         if pool is not None:
             availability = _residual_availability(pool, r_total, market.slot)
 
-    final_w = np.exp(logw - logw.max())
-    final_w /= final_w.sum()
     fixed = (C * Z[:, None]).sum(axis=0) / Z.sum()
-    return TolaResult(chosen=chosen, weights=final_w, realized=realized,
-                      cost_matrix=C, fixed_unit_costs=fixed)
+    return TolaResult(chosen=chosen, weights=lr.weights[0, 0],
+                      realized=realized, cost_matrix=C,
+                      fixed_unit_costs=fixed, learn=lr)
 
 
 def run_tola_scenarios(
@@ -192,6 +188,7 @@ def run_tola_scenarios(
     early_start: bool = True,
     pool_iters: int = 1,
     backend: str = "auto",
+    learner="hedge",
 ) -> list[TolaResult]:
     """Algorithm 4 across S market scenarios, cost matrices batched.
 
@@ -210,7 +207,7 @@ def run_tola_scenarios(
     return [
         run_tola(jobs, policies, m, r_total, seed=seed + s, windows=windows,
                  selfowned=selfowned, early_start=early_start,
-                 pool_iters=pool_iters, backend=backend,
+                 pool_iters=pool_iters, backend=backend, learner=learner,
                  _C0=res.unit_cost[s])
         for s, m in enumerate(markets)
     ]

@@ -16,6 +16,7 @@ from repro.engine.api import available_backends, evaluate_grid, resolve_backend
 from repro.engine.plan import EvalGroup, GridPlan, build_grid_plan
 from repro.engine.result import EngineResult
 from repro.engine.scenarios import (
+    adversarial_scenarios,
     check_scenarios,
     make_scenarios,
     replay_scenarios,
@@ -25,5 +26,6 @@ from repro.engine.scenarios import (
 __all__ = [
     "evaluate_grid", "available_backends", "resolve_backend",
     "EngineResult", "EvalGroup", "GridPlan", "build_grid_plan",
-    "make_scenarios", "replay_scenarios", "check_scenarios", "stack_views",
+    "make_scenarios", "adversarial_scenarios", "replay_scenarios",
+    "check_scenarios", "stack_views",
 ]

@@ -11,7 +11,15 @@ kernel). Three families:
   cheap/expensive spot epochs), exercising policies under markets their
   beta grid was not tuned for;
 * ``replay`` — recorded per-slot traces wrapped via
-  ``SpotMarket.from_prices`` (the replay-trace adapter).
+  ``SpotMarket.from_prices`` (the replay-trace adapter);
+* ``adversarial`` — square-wave lure/spike paths built to drive worst-case
+  regret for TOLA: long cheap epochs bait the learner toward low-bid,
+  spot-heavy policies, then the price spikes to the on-demand ceiling for
+  a stretch comparable to a task window, so work sampled into the lure
+  lands its window on the spike and pays the full on-demand backstop. The
+  spike period is swept across scenarios (no single policy-window length
+  is safe), which is what makes the family a regret stress test rather
+  than one unlucky trace.
 
 All scenarios of a batch share the slot grid and horizon so their cumulative
 arrays stack into one (S, n_slots+1) tensor.
@@ -23,10 +31,10 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.market import PRICE_HI, SpotMarket
+from repro.core.market import PRICE_HI, PRICE_LO, PRICE_MEAN, SpotMarket
 
-__all__ = ["make_scenarios", "replay_scenarios", "check_scenarios",
-           "stack_views"]
+__all__ = ["make_scenarios", "adversarial_scenarios", "replay_scenarios",
+           "check_scenarios", "stack_views"]
 
 
 def make_scenarios(
@@ -36,6 +44,8 @@ def make_scenarios(
     kind: str = "fresh",
     price_model: str = "shifted",
     mean_range: tuple[float, float] = (0.125, 0.22),
+    spike_range: tuple[float, float] = (0.5, 4.0),
+    spike_frac: float = 0.5,
 ) -> list[SpotMarket]:
     """Build S markets over a common horizon.
 
@@ -44,6 +54,12 @@ def make_scenarios(
     regime per scenario, fresh seed each) — with ``price_model="truncate"``
     this is the truncated-exp regime sweep; the default "shifted" model keeps
     the paper's reading of the price law (DESIGN.md §4).
+    ``kind="adversarial"``: lure/spike square waves — the spike period is
+    swept geometrically over ``spike_range`` (time units, bracketing the
+    Dealloc window lengths of the paper's policy grid) with ``spike_frac``
+    of each period pinned at the on-demand ceiling; the cheap epochs draw
+    from a halved-mean price law so every bid of the grid clears during the
+    lure and none clears inside the spike.
     """
     if n_scenarios < 1:
         raise ValueError("need at least one scenario")
@@ -57,7 +73,55 @@ def make_scenarios(
                            price_mean=float(means[s]),
                            price_model=price_model)
                 for s in range(n_scenarios)]
+    if kind == "adversarial":
+        return adversarial_scenarios(horizon_units, n_scenarios, seed=seed,
+                                     spike_range=spike_range,
+                                     spike_frac=spike_frac)
     raise ValueError(f"unknown scenario kind {kind!r}")
+
+
+def adversarial_scenarios(
+    horizon_units: float,
+    n_scenarios: int,
+    seed: int = 0,
+    slots_per_unit: int | None = None,
+    spike_range: tuple[float, float] = (0.5, 4.0),
+    spike_frac: float = 0.5,
+) -> list[SpotMarket]:
+    """Worst-case-regret price paths (ROADMAP scenario family).
+
+    Scenario s is a square wave with period ``P_s`` (geometric sweep over
+    ``spike_range`` time units): a cheap *lure* phase whose prices are drawn
+    from the paper's law with half the usual mean (so every bid in B
+    clears and spot looks like free money to the learner), then a *spike*
+    phase of ``spike_frac * P_s`` pinned at ``PRICE_HI`` — above every bid,
+    so any task whose Dealloc window straddles the spike exhausts its
+    flexibility against zero availability and pays the on-demand backstop
+    for the remainder. Phase offsets are randomized per scenario so job
+    arrivals cannot be systematically in phase with the lure.
+    """
+    from repro.core.market import SLOTS_PER_UNIT
+
+    if n_scenarios < 1:
+        raise ValueError("need at least one scenario")
+    spu = slots_per_unit or SLOTS_PER_UNIT
+    n_slots = int(np.ceil(horizon_units * spu)) + 1
+    if n_scenarios == 1:
+        periods = [float(np.sqrt(spike_range[0] * spike_range[1]))]
+    else:
+        periods = np.geomspace(*spike_range, n_scenarios)
+    markets = []
+    for s in range(n_scenarios):
+        rng = np.random.default_rng(seed + s)
+        lure = np.minimum(PRICE_LO + rng.exponential(0.5 * PRICE_MEAN,
+                                                     n_slots), PRICE_HI)
+        period_slots = max(int(round(periods[s] * spu)), 2)
+        spike_slots = max(int(round(spike_frac * period_slots)), 1)
+        phase = (np.arange(n_slots) + rng.integers(period_slots)) \
+            % period_slots
+        price = np.where(phase < spike_slots, PRICE_HI, lure)
+        markets.append(SpotMarket.from_prices(price, slots_per_unit=spu))
+    return markets
 
 
 def replay_scenarios(

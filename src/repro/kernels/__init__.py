@@ -8,6 +8,10 @@
                     arrays); policy_cost_chain extends it to whole
                     (scenario x policy x job) grids — one launch per bid,
                     chain recurrence in-kernel (repro.engine's fast path)
+  weight_update   — the online-learning hot loop (repro.learn's pallas
+                    path): fused Hedge replay — in-VMEM weight-trajectory
+                    pass + one-hot-matmul sample gather, one launch per
+                    (scenario x learner x schedule-grid) sweep
 
 Each kernel has a pure-jnp oracle in ref.py (structurally different
 algorithm) and a jit'd wrapper in ops.py; validated in interpret mode on CPU.

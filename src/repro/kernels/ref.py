@@ -13,7 +13,43 @@ import numpy as np
 
 from repro.core.simulate import FLEX_ABS, FLEX_REL
 
-__all__ = ["attention_ref", "ssd_ref", "policy_cost_ref", "chain_costs_ref"]
+__all__ = ["attention_ref", "ssd_ref", "policy_cost_ref", "chain_costs_ref",
+           "hedge_replay_ref"]
+
+
+def hedge_replay_ref(C, etas, u, n_done):
+    """Vectorized numpy oracle for the fused Hedge replay kernel.
+
+    Same two-pass factorization as ``kernels/weight_update.py`` but exact
+    float64 and loop-free: the log-space renormalization cancels inside the
+    softmax, so the trajectory is just the running sum ``W[k] = sum_{i<k}
+    eta_i * C[i]`` and the state at job j's sample is ``softmax(-W[n_done
+    [j]])``. Sampling is inverse-CDF (``searchsorted`` side="right") on the
+    shared uniform stream — the exact arithmetic ``Generator.choice`` uses.
+
+    C: (J, P) unit costs; etas/u/n_done: (J,). One replay instance.
+    Returns dict(chosen, p_chosen, expected_cost, weights).
+    """
+    C = np.asarray(C, dtype=np.float64)
+    J, P = C.shape
+    W = np.concatenate([np.zeros((1, P)),
+                        np.cumsum(np.asarray(etas)[:, None] * C, axis=0)])
+    logw = -W[np.asarray(n_done)]
+    logw -= logw.max(axis=1, keepdims=True)
+    p = np.exp(logw)
+    p /= p.sum(axis=1, keepdims=True)
+    cdf = np.cumsum(p, axis=1)
+    cdf /= cdf[:, -1:]
+    chosen = np.minimum((cdf <= np.asarray(u)[:, None]).sum(axis=1), P - 1)
+    wf = -W[J] + W[J].min()
+    w = np.exp(wf)
+    w /= w.sum()
+    return {
+        "chosen": chosen.astype(np.int64),
+        "p_chosen": p[np.arange(J), chosen],
+        "expected_cost": (p * C).sum(axis=1),
+        "weights": w,
+    }
 
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,

@@ -1,0 +1,166 @@
+"""Pallas TPU kernel for the online-learning hot loop: the fused Hedge
+weight-update replay (paper Alg. 4 over a precomputed cost tensor).
+
+The recurrence is tiny per step (an (m,)-vector exponentiated-weights
+update) but strictly sequential over jobs, and the learn subsystem replays
+it for every (scenario x learner x schedule-grid) instance. The TPU
+formulation exploits that the FULL-INFORMATION update does not depend on
+the sampled trace, so the replay factors into two in-kernel passes over
+VMEM-resident data (one grid cell per replay instance):
+
+1. *Trajectory pass* — ``fori_loop`` over the J update events in order:
+   ``logw <- logw - eta_j * C[j]`` followed by the log-space
+   renormalization ``logw <- logw - max(logw)`` (the exp-rescale that pins
+   the top weight at exp(0) = 1 so long horizons cannot flush the weights
+   to zero), each state written to a (J+1, P) VMEM scratch trajectory.
+2. *Sample pass* — jobs in blocks of ``block_jobs``: the delayed-feedback
+   offset ``n_done[j]`` (how many updates had been applied when job j
+   sampled) selects each job's trajectory row via a one-hot MATMUL (MXU
+   work instead of serial gathers, the same trick ``policy_cost.py`` uses
+   for searchsorted); normalize to probabilities, inverse-CDF sample
+   against the precomputed uniform stream (cumsum as a triangular-ones
+   matmul, then a comparison count), and read off the chosen index, its
+   probability and the expected cost.
+
+Oracle: ``kernels/ref.py::hedge_replay_ref`` (vectorized numpy, same
+two-pass factorization) and the sequential event loop in
+``repro.learn.replay`` (float64, structurally different) — see
+tests/test_learn.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["hedge_replay"]
+
+_NEG = -3.0e38  # "minus infinity" that stays finite in float32
+
+
+def _hedge_kernel(C_ref, eta_ref, u_ref, nd_ref,
+                  ch_ref, ps_ref, ec_ref, wf_ref, traj, *,
+                  J: int, n_rows: int, Pp: int, m: int, BJ: int):
+    # Zero the scratch so padded trajectory rows contribute exact zeros to
+    # the one-hot matmuls (uninitialized VMEM could hold NaNs).
+    traj[...] = jnp.zeros((n_rows, Pp), jnp.float32)
+    lane1 = jax.lax.broadcasted_iota(jnp.int32, (1, Pp), 1)
+    init = jnp.where(lane1 < m, jnp.float32(-np.log(m)), jnp.float32(_NEG))
+    traj[pl.dslice(0, 1), :] = init
+
+    def stepA(i, logw):
+        c_row = C_ref[0, pl.dslice(i, 1), :]          # (1, Pp)
+        eta = eta_ref[:, pl.dslice(i, 1)]             # (1, 1)
+        logw = logw - eta * c_row
+        logw = logw - jnp.max(logw)                   # exp-rescale, log space
+        traj[pl.dslice(i + 1, 1), :] = logw
+        return logw
+
+    logw_f = jax.lax.fori_loop(0, J, stepA, init)
+    wf_ref[...] = logw_f
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (BJ, n_rows), 1)
+    lanes = jax.lax.broadcasted_iota(jnp.int32, (BJ, Pp), 1)
+    # tri[i, k] = 1 iff i <= k: p @ tri is an inclusive cumsum along lanes.
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (Pp, Pp), 0)
+           <= jax.lax.broadcasted_iota(jnp.int32, (Pp, Pp), 1)
+           ).astype(jnp.float32)
+
+    def stepB(c, carry):
+        base = c * BJ
+        nd = nd_ref[0, pl.dslice(base, BJ)]                  # (BJ,) int32
+        oh = (rows == nd[:, None]).astype(jnp.float32)       # (BJ, n_rows)
+        logw_s = jnp.dot(oh, traj[...],
+                         preferred_element_type=jnp.float32)  # (BJ, Pp)
+        logw_s = logw_s - jnp.max(logw_s, axis=1, keepdims=True)
+        p = jnp.exp(logw_s)
+        p = p / jnp.sum(p, axis=1, keepdims=True)
+        cdf = jnp.dot(p, tri, preferred_element_type=jnp.float32)
+        uu = u_ref[0, pl.dslice(base, BJ)]                   # (BJ,)
+        total = cdf[:, Pp - 1:Pp]
+        cnt = jnp.sum((cdf <= uu[:, None] * total).astype(jnp.int32), axis=1)
+        chosen = jnp.minimum(cnt, m - 1)
+        oh_c = (lanes == chosen[:, None]).astype(jnp.float32)
+        c_blk = C_ref[0, pl.dslice(base, BJ), :]             # (BJ, Pp)
+        ch_ref[0, pl.dslice(base, BJ)] = chosen
+        ps_ref[0, pl.dslice(base, BJ)] = jnp.sum(p * oh_c, axis=1)
+        ec_ref[0, pl.dslice(base, BJ)] = jnp.sum(p * c_blk, axis=1)
+        return carry
+
+    jax.lax.fori_loop(0, (J + BJ - 1) // BJ, stepB, 0)
+
+
+def hedge_replay(C, etas, u, n_done, *, block_jobs: int = 128,
+                 interpret: bool | None = None):
+    """Fused Hedge replay over a (S, J, P) cost tensor.
+
+    ``C``: per-scenario counterfactual unit costs; ``etas``: (K, J)
+    per-update learning rates (one row per schedule-grid instance); ``u``:
+    (S, J) per-scenario uniform sampling streams; ``n_done``: (J,) updates
+    applied before each job's sample (``repro.learn.replay.build_events``).
+    One kernel launch covers the whole S x K instance grid. Returns dict of
+    ``chosen``/``p_chosen``/``expected_cost`` (S, K, J) and final sampling
+    ``weights`` (S, K, P).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    C = np.asarray(C, dtype=np.float32)
+    S, J, P = C.shape
+    etas = np.atleast_2d(np.asarray(etas, dtype=np.float32))
+    K = etas.shape[0]
+    BJ = min(block_jobs, max(8, J))
+    Jp = -(-J // BJ) * BJ
+    Pp = -(-P // 128) * 128
+    n_rows = -(-(J + 1) // 8) * 8
+
+    C_p = np.zeros((S, Jp, Pp), dtype=np.float32)
+    C_p[:, :J, :P] = C
+    eta_p = np.zeros((K, Jp), dtype=np.float32)
+    eta_p[:, :J] = etas
+    u_p = np.full((S, Jp), 2.0, dtype=np.float32)
+    u_p[:, :J] = np.asarray(u, dtype=np.float32)
+    nd_p = np.zeros((1, Jp), dtype=np.int32)
+    nd_p[0, :J] = np.asarray(n_done, dtype=np.int32)
+
+    kernel = functools.partial(_hedge_kernel, J=J, n_rows=n_rows, Pp=Pp,
+                               m=P, BJ=BJ)
+    B = S * K
+    ch, ps, ec, wf = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Jp, Pp), lambda b: (b // K, 0, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (b % K, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (b // K, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
+            pl.BlockSpec((1, Pp), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Jp), jnp.int32),
+            jax.ShapeDtypeStruct((B, Jp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Jp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Pp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n_rows, Pp), jnp.float32)],
+        interpret=interpret,
+    )(C_p, eta_p, u_p, nd_p)
+
+    logw = np.asarray(wf, dtype=np.float64).reshape(S, K, Pp)[..., :P]
+    w = np.exp(logw - logw.max(axis=-1, keepdims=True))
+    w /= w.sum(axis=-1, keepdims=True)
+    return {
+        "chosen": np.asarray(ch, np.int64).reshape(S, K, Jp)[..., :J],
+        "p_chosen": np.asarray(ps, np.float64).reshape(S, K, Jp)[..., :J],
+        "expected_cost": np.asarray(ec, np.float64).reshape(S, K, Jp)[..., :J],
+        "weights": w,
+    }

@@ -1,0 +1,285 @@
+"""Batched replay of the online-learning recurrence over a cost tensor.
+
+The paper's Alg. 4 is a sequential recurrence over a merged event stream:
+when job j ARRIVES a policy is sampled from the learner's current
+distribution; once its window has fully ELAPSED (``t = a_j + d``) its
+counterfactual costs become observable and the learner state is updated.
+The engine (``repro.engine``) already produces the full (scenarios x jobs x
+policies) counterfactual cost tensor in one batched pass; this module
+replays ANY learner of ``learners.py`` over that tensor:
+
+* ``backend="numpy"`` — the sequential float64 event loop, the exact
+  oracle. For ``hedge`` with the ``alg4`` schedule it is bit-compatible
+  with the pre-subsystem ``run_tola`` loop (same logw arithmetic, same
+  uniform-stream consumption as ``rng.choice`` — see ``_sample_cdf``).
+* ``backend="jax"``  — the same event stream as ONE ``jax.lax.scan``,
+  compiled once per learner kind and vmapped across scenarios x (learner,
+  schedule-grid) instances, so an entire learner-comparison sweep is a
+  single compiled call.
+* ``backend="pallas"`` — hedge-family instances route to the fused
+  ``kernels/weight_update.py`` TPU kernel (trajectory pass + one-hot-matmul
+  sample gather); other kinds fall back to the jax scan.
+
+Sampling is inverse-CDF against a per-scenario uniform stream drawn up
+front in numpy: ``searchsorted(cdf, u, side="right")`` is exactly what
+``np.random.Generator.choice(m, p=w)`` computes internally, so all
+backends consume the SAME randomness and produce the SAME sampled-policy
+trace (up to float ties) — and all learners of a sweep share the stream
+(common random numbers, which is what makes their comparison low-variance).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.learn.learners import (
+    FULL_INFO_KINDS,
+    LearnerSpec,
+    as_spec,
+    init_state,
+    sample_probs,
+    update_state,
+)
+from repro.learn.regret import LearnResult
+
+__all__ = ["replay", "build_events", "available_backends", "resolve_backend"]
+
+
+def available_backends() -> list[str]:
+    """Replay backends usable in this process (same probe as the engine)."""
+    from repro.engine import available_backends as engine_backends
+
+    return engine_backends()
+
+
+def resolve_backend(backend: str) -> str:
+    if backend == "auto":
+        return "jax" if "jax" in available_backends() else "numpy"
+    if backend not in ("numpy", "jax", "pallas"):
+        raise ValueError(f"unknown replay backend {backend!r}")
+    return backend
+
+
+def build_events(arrivals: np.ndarray, d: float):
+    """Merged (sample, update) event stream, exactly as Alg. 4 orders it.
+
+    Returns ``(ev_kind, ev_j, n_done)``: per-event kind (0 = sample at
+    ``a_j``, 1 = update at ``a_j + d``) and job index, in the same
+    lexicographic (t, kind, j) order the legacy loop used — at equal times
+    samples precede updates — plus ``n_done[j]``, the number of updates
+    already applied when job j samples (the delayed-feedback offsets the
+    trajectory-based kernels consume).
+    """
+    n = len(arrivals)
+    events = sorted(
+        [(float(arrivals[j]), 0, j) for j in range(n)]
+        + [(float(arrivals[j] + d), 1, j) for j in range(n)]
+    )
+    ev_kind = np.array([k for _, k, _ in events], dtype=np.int32)
+    ev_j = np.array([j for _, _, j in events], dtype=np.int32)
+    upd_before = np.concatenate([[0], np.cumsum(ev_kind)])[:-1]
+    n_done = np.zeros(n, dtype=np.int32)
+    sample_pos = ev_kind == 0
+    n_done[ev_j[sample_pos]] = upd_before[sample_pos]
+    return ev_kind, ev_j, n_done
+
+
+def _sample_cdf(p: np.ndarray, u: float) -> int:
+    """What ``np.random.Generator.choice(m, p)`` does with one uniform."""
+    cdf = np.cumsum(p)
+    cdf /= cdf[-1]
+    return min(int(np.searchsorted(cdf, u, side="right")), len(p) - 1)
+
+
+def _replay_numpy_one(C, spec, u, ev_kind, ev_j, etas, gammas):
+    """Sequential float64 event loop for one (scenario, learner) instance."""
+    n, m = C.shape
+    st = init_state(m, np)
+    chosen = np.zeros(n, dtype=np.int64)
+    p_sel = np.zeros(n)
+    e_cost = np.zeros(n)
+    for kind, j in zip(ev_kind, ev_j):
+        if kind == 0:
+            p = sample_probs(spec.kind, st, gammas[j], np)
+            c = _sample_cdf(p, u[j])
+            chosen[j] = c
+            p_sel[j] = p[c]
+            e_cost[j] = float(p @ C[j])
+        else:
+            oh = np.where(np.arange(m) == chosen[j], 1.0, 0.0)
+            st = update_state(spec.kind, st, C[j], oh, p_sel[j], etas[j], np)
+    weights = sample_probs(spec.kind, st, gammas[-1], np)
+    return chosen, p_sel, e_cost, weights
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_scan(kind: str, ring: int):
+    """Jitted event scan for one learner kind, cached across replay calls
+    (a fresh closure per call would force an XLA recompile per call).
+
+    The scan carry holds only the learner state plus a small ring buffer of
+    in-flight (chosen, p_chosen) pairs — the sample of job j and its
+    delayed update are at most ``ring`` jobs apart, so ``j % ring`` slots
+    never collide; per-job outputs leave through the scan's stacked ys
+    instead of (J,)-sized carries (which would cost a dynamic-update copy
+    per event). Retraces only on new (kind, ring) or new array shapes.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def one(C2, u1, eta1, gamma1, ev_kind, ev_j):
+        m = C2.shape[-1]
+
+        def step(carry, x):
+            st, rb_c, rb_p = carry
+            ev_k, j = x
+            slot = j % ring
+            c_row = C2[j]
+            p = sample_probs(kind, st, gamma1[j], jnp)
+            cdf = jnp.cumsum(p)
+            cdf = cdf / cdf[-1]
+            c = jnp.minimum(
+                jnp.searchsorted(cdf, u1[j], side="right"), m - 1)
+            is_sample = ev_k == 0
+            rb_c = rb_c.at[slot].set(jnp.where(is_sample, c, rb_c[slot]))
+            rb_p = rb_p.at[slot].set(jnp.where(is_sample, p[c], rb_p[slot]))
+            oh = jnp.where(jnp.arange(m) == rb_c[slot], 1.0, 0.0)
+            new = update_state(kind, st, c_row, oh, rb_p[slot], eta1[j], jnp)
+            st = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(is_sample, a, b), st, new)
+            return (st, rb_c, rb_p), (rb_c[slot], rb_p[slot], p @ c_row)
+
+        carry0 = (init_state(m, jnp), jnp.zeros(ring, jnp.int32),
+                  jnp.zeros(ring))
+        (st, _, _), ys = jax.lax.scan(step, carry0, (ev_kind, ev_j))
+        weights = sample_probs(kind, st, gamma1[-1], jnp)
+        return ys[0], ys[1], ys[2], weights
+
+    f = jax.vmap(one, in_axes=(None, None, 0, 0, None, None))  # grid axis
+    f = jax.vmap(f, in_axes=(0, 0, None, None, None, None))    # scenarios
+    return jax.jit(f)
+
+
+def _replay_jax_kind(kind, C, u, etas_k, gammas_k, ev_kind, ev_j):
+    """One compiled scan per learner kind, vmapped over S scenarios x K
+    schedule-grid instances. C: (S, J, P); u: (S, J); etas/gammas: (K, J)."""
+    import jax.numpy as jnp
+
+    # Max jobs simultaneously sampled-but-not-updated (+1 so the sample
+    # event itself fits): update j reads slot j % ring strictly before any
+    # sample j' >= j + ring could overwrite it.
+    inflight = np.cumsum(np.where(ev_kind == 0, 1, -1))
+    ring = int(inflight.max(initial=0)) + 1
+    ch_e, ps_e, ec_e, weights = _compiled_scan(kind, ring)(
+        jnp.asarray(C, jnp.float32), jnp.asarray(u),
+        jnp.asarray(etas_k), jnp.asarray(gammas_k),
+        jnp.asarray(ev_kind), jnp.asarray(ev_j))
+    # Sample events occur in job order: selecting them from the per-event
+    # ys yields the per-job traces.
+    sample_pos = np.nonzero(ev_kind == 0)[0]
+    return (np.asarray(ch_e)[..., sample_pos],
+            np.asarray(ps_e)[..., sample_pos],
+            np.asarray(ec_e)[..., sample_pos], weights)
+
+
+def replay(
+    C,
+    arrivals,
+    d: float,
+    workload=None,
+    learners=("hedge",),
+    seed: int = 0,
+    rng: np.random.Generator | None = None,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> LearnResult:
+    """Replay a batch of learners over a (S, J, P) counterfactual tensor.
+
+    ``C`` is the engine's cost tensor (an ``EngineResult``, its
+    ``unit_cost``, or a raw (J, P) / (S, J, P) array); ``arrivals`` the
+    arrival-ordered job times, ``d`` the max relative deadline (feedback
+    delay), ``workload`` the per-job Z_j used by the regret accounting
+    (defaults to 1). ``learners`` is a flat list of kinds / ``LearnerSpec``s
+    — a schedule grid is expressed as more specs; the result keeps their
+    order. ``rng`` (single-scenario only) draws the uniform stream from a
+    live generator — the hook ``run_tola`` uses to stay bit-compatible with
+    its legacy sampling stream; otherwise scenario s uses ``seed + s``.
+    """
+    if hasattr(C, "unit_cost"):
+        if workload is None:
+            workload = C.workload
+        C = C.unit_cost
+    C = np.asarray(C, dtype=np.float64)
+    if C.ndim == 2:
+        C = C[None]
+    if C.ndim != 3:
+        raise ValueError(f"cost tensor must be (S, J, P); got {C.shape}")
+    S, n, m = C.shape
+    arrivals = np.asarray(arrivals, dtype=np.float64)
+    if len(arrivals) != n:
+        raise ValueError("arrivals length != n_jobs axis of C")
+    Z = np.ones(n) if workload is None else np.asarray(workload, np.float64)
+    specs = [as_spec(l) for l in learners]
+    if not specs:
+        raise ValueError("need at least one learner")
+    backend = resolve_backend(backend)
+
+    ev_kind, ev_j, n_done = build_events(arrivals, d)
+    etas = np.stack([sp.eta.values(arrivals, d, m) for sp in specs])
+    gammas = np.stack([sp.explore.values(arrivals, d, m) for sp in specs])
+    if rng is not None:
+        if S != 1:
+            raise ValueError("rng streams are single-scenario only")
+        u = rng.random(n)[None]
+    else:
+        u = np.stack([np.random.default_rng(seed + s).random(n)
+                      for s in range(S)])
+
+    K = len(specs)
+    chosen = np.zeros((S, K, n), dtype=np.int64)
+    p_sel = np.zeros((S, K, n))
+    e_cost = np.zeros((S, K, n))
+    weights = np.zeros((S, K, m))
+
+    if backend == "numpy":
+        for s in range(S):
+            for k, sp in enumerate(specs):
+                out = _replay_numpy_one(C[s], sp, u[s], ev_kind, ev_j,
+                                        etas[k], gammas[k])
+                chosen[s, k], p_sel[s, k], e_cost[s, k], weights[s, k] = out
+    else:
+        pallas_ks: list[int] = []
+        if backend == "pallas":
+            # The fused kernel implements the full-information
+            # exponentiated-weights trajectory — hedge instances only.
+            pallas_ks = [k for k, sp in enumerate(specs)
+                         if sp.kind == "hedge"]
+            if pallas_ks:
+                from repro.kernels.weight_update import hedge_replay
+                out = hedge_replay(C, etas[pallas_ks], u, n_done,
+                                   interpret=interpret)
+                for i, k in enumerate(pallas_ks):
+                    chosen[:, k] = out["chosen"][:, i]
+                    p_sel[:, k] = out["p_chosen"][:, i]
+                    e_cost[:, k] = out["expected_cost"][:, i]
+                    weights[:, k] = out["weights"][:, i]
+        by_kind: dict[str, list[int]] = {}
+        for k, sp in enumerate(specs):
+            if k not in pallas_ks:
+                by_kind.setdefault(sp.kind, []).append(k)
+        for kind, ks in by_kind.items():
+            out = _replay_jax_kind(kind, C, u, etas[ks], gammas[ks],
+                                   ev_kind, ev_j)
+            ch, ps, ec, wf = (np.asarray(o, np.float64) for o in out)
+            for i, k in enumerate(ks):
+                chosen[:, k] = ch[:, i].astype(np.int64)
+                p_sel[:, k] = ps[:, i]
+                e_cost[:, k] = ec[:, i]
+                weights[:, k] = wf[:, i]
+
+    return LearnResult(
+        specs=specs, chosen=chosen, p_chosen=p_sel, expected_unit=e_cost,
+        weights=weights, unit_cost=C, arrivals=arrivals, workload=Z,
+        feedback_delay=float(d), backend=backend)
