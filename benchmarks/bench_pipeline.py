@@ -1,23 +1,21 @@
-"""Evaluation-engine throughput: numpy vs jax vs pallas.
+"""End-to-end pipeline throughput: jobs -> plans -> pool -> cost tensor.
 
-Times ``repro.engine.evaluate_grid`` on a (n_jobs x n_policies x S) grid —
-the TOLA counterfactual cost-matrix workload — per backend, and emits
-``BENCH_engine.json``:
+``bench_engine`` times only the backend evaluation of a prebuilt grid plan;
+this benchmark times the WHOLE ``evaluate_grid`` pass per backend — plan
+tensor construction, self-owned pool arithmetic, and market realization —
+and breaks the wall time into those three phases (``EngineResult.timings``),
+so the plan layer's cost is a tracked number instead of hidden warmup.
+It also races the batched plan builder (``build_plans_batch``, one
+vectorized (G, J, L) pass over the deduplicated window-parameter grid)
+against the legacy per-group ``build_plans`` loop it replaced. Emits
+``BENCH_pipeline.json``:
 
-    PYTHONPATH=src python -m benchmarks.bench_engine \
+    PYTHONPATH=src python -m benchmarks.bench_pipeline \
         [--jobs 512] [--policies 70] [--scenarios 4] [--r 600] \
-        [--backends numpy jax pallas] [--out BENCH_engine.json]
+        [--backends numpy jax] [--out BENCH_pipeline.json]
 
-Reported per backend: end-to-end wall seconds (best of --iters, after one
-untimed warmup that absorbs jit/pallas compilation) with the plan / pool /
-eval phase split, eval-only throughput in grid cells per second (cells =
-S * n_jobs * n_policies), and the deduplicated evaluation group count (the
-engine collapses policies sharing (windows, beta_0, bid) — throughput is
-quoted over the FULL grid the caller asked for). Off-TPU the pallas backend
-runs its kernels in interpret mode — such entries carry ``"interpret":
-true`` and a ``"note"`` spelling out that the number is kernel-logic
-timing, NOT TPU speed (read the pallas number on real hardware only; see
-``benchmarks/bench_pipeline.py`` for the end-to-end pipeline benchmark).
+Off-TPU the pallas backend runs in interpret mode — kernel-logic timing,
+not TPU speed (tagged in the output; compare numpy vs jax there).
 """
 
 from __future__ import annotations
@@ -28,15 +26,26 @@ import time
 
 import numpy as np
 
-from repro.core import generate_chain_jobs, selfowned_policies
-from repro.engine import build_grid_plan, evaluate_grid, make_scenarios
+from repro.core import Policy, generate_chain_jobs, selfowned_policies
+from repro.core.scheduler import build_plans, build_plans_batch
+from repro.engine import evaluate_grid, make_scenarios
+from repro.engine.plan import distinct_window_params
 
 __all__ = ["run", "main"]
 
 
+def _best_of(fn, iters: int) -> float:
+    best = np.inf
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
 def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
         backends: list[str], seed: int = 0, job_type: int = 2,
-        iters: int = 2) -> dict:
+        iters: int = 3) -> dict:
     if iters < 1:
         raise ValueError("need --iters >= 1 (one timed pass after warmup)")
     jobs = generate_chain_jobs(n_jobs, job_type, seed=seed)
@@ -45,8 +54,16 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
     grid = selfowned_policies()[:n_policies]
     if len(grid) < n_policies:
         raise ValueError(f"policy grid has only {len(grid)} policies")
-    gplan = build_grid_plan(jobs, grid, r_total)
     cells = n_scenarios * n_jobs * len(grid)
+
+    # --- plan phase: batched builder vs the legacy per-group loop --------
+    xs = list(distinct_window_params(grid, r_total).values())
+
+    t_loop = _best_of(
+        lambda: [build_plans(jobs, Policy(beta=x, bid=0.0), r_total)
+                 for x in xs], iters)
+    t_batch = _best_of(lambda: build_plans_batch(jobs, xs), iters)
+
     out = {
         "n_jobs": n_jobs,
         "n_policies": len(grid),
@@ -55,9 +72,10 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
         "job_type": job_type,
         "seed": seed,
         "cells": cells,
-        "eval_groups": len(gplan.groups),
-        "L": gplan.L,
-        "n_slots": markets[0].n_slots,
+        "window_groups": len(xs),
+        "plan_loop_seconds": t_loop,
+        "plan_batch_seconds": t_batch,
+        "plan_batch_speedup": t_loop / t_batch,
         "backends": {},
     }
     try:
@@ -65,30 +83,31 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
         out["jax_backend"] = jax.default_backend()
     except Exception:
         out["jax_backend"] = None
+    print(f"[plan  ] loop {t_loop:7.3f}s  batch {t_batch:7.3f}s  "
+          f"({out['plan_batch_speedup']:.1f}x, {len(xs)} window groups)")
 
+    # --- end-to-end jobs -> cost tensor, per backend ---------------------
     ref = None
     for backend in backends:
-        warmup = None
         res = None
-        best = float("inf")
+        best = np.inf
         phases = None
         for it in range(iters + 1):
-            t0 = time.time()
-            res = evaluate_grid(jobs, grid, markets, r_total, backend=backend)
-            dt = time.time() - t0
-            if it == 0:          # warmup pass absorbs jit/pallas compilation
-                warmup = dt
+            t0 = time.perf_counter()
+            res = evaluate_grid(jobs, grid, markets, r_total,
+                                backend=backend)
+            dt = time.perf_counter() - t0
+            if it == 0:
+                warmup = dt      # absorbs jit / pallas compilation
             elif dt < best:
                 best, phases = dt, dict(res.timings)
         entry = {
-            "seconds": best,                  # end-to-end wall
+            "end_to_end_seconds": best,
             "warmup_seconds": warmup,
+            "cells_per_sec_end_to_end": cells / best,
             "plan_seconds": phases["plan"],
             "pool_seconds": phases["pool"],
             "eval_seconds": phases["eval"],
-            "cells_per_sec_eval": cells / phases["eval"],
-            "cells_per_sec_end_to_end": cells / best,
-            # Mirrors backend_pallas.run's default: interpret iff CPU.
             "interpret": backend == "pallas"
             and out["jax_backend"] == "cpu",
         }
@@ -103,13 +122,12 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
         else:
             entry["max_abs_diff_vs_first"] = float(
                 np.abs(res.unit_cost - ref).max())
-        print(f"[{backend:6s}] {best:8.3f}s end-to-end "
-              f"(plan {phases['plan']:.3f} pool {phases['pool']:.3f} "
+        tag = "  (interpret — kernel logic, NOT TPU speed)" \
+            if entry["interpret"] else ""
+        print(f"[{backend:6s}] {best:7.3f}s end-to-end  "
+              f"(plan {phases['plan']:.3f}  pool {phases['pool']:.3f}  "
               f"eval {phases['eval']:.3f})  "
-              f"{cells / phases['eval'] / 1e3:10.1f}k cells/s eval  "
-              f"maxdiff {entry['max_abs_diff_vs_first']:.2e}"
-              + ("  (INTERPRET — not TPU speed)" if entry["interpret"]
-                 else ""))
+              f"{cells / best / 1e3:9.1f}k cells/s{tag}")
     return out
 
 
@@ -121,11 +139,10 @@ def main(argv=None):
     p.add_argument("--r", type=int, default=600)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--job-type", type=int, default=2)
-    p.add_argument("--iters", type=int, default=2)
-    p.add_argument("--backends", nargs="+",
-                   default=["numpy", "jax", "pallas"],
+    p.add_argument("--iters", type=int, default=3)
+    p.add_argument("--backends", nargs="+", default=["numpy", "jax"],
                    choices=["numpy", "jax", "pallas"])
-    p.add_argument("--out", default="BENCH_engine.json")
+    p.add_argument("--out", default="BENCH_pipeline.json")
     args = p.parse_args(argv)
     res = run(args.jobs, args.policies, args.scenarios, args.r,
               args.backends, seed=args.seed, job_type=args.job_type,

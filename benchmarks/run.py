@@ -12,6 +12,10 @@ Sections:
                     BENCH_engine.json (see benchmarks/bench_engine.py for
                     how to read it — off-TPU the pallas number is interpret
                     mode, i.e. kernel logic, not TPU speed)
+  pipeline        — END-TO-END jobs -> plans -> pool -> cost tensor per
+                    backend with a plan/pool/eval phase split, plus the
+                    batched-plan-builder vs per-group-loop race; emits
+                    BENCH_pipeline.json (benchmarks/bench_pipeline.py)
   learn           — online-learning replay throughput (numpy oracle vs the
                     scan-compiled jax replay) across a learner x eta-grid
                     sweep over the same grid; emits BENCH_learn.json
@@ -39,10 +43,10 @@ def main(argv=None):
                    help="small streams / reduced grids for CI-speed runs")
     p.add_argument("--skip", nargs="*", default=[],
                    choices=["exp1", "exp2", "exp3", "exp4", "engine",
-                            "learn", "roofline"])
+                            "pipeline", "learn", "roofline"])
     p.add_argument("--only", nargs="*", default=None,
                    choices=["exp1", "exp2", "exp3", "exp4", "engine",
-                            "learn", "roofline"])
+                            "pipeline", "learn", "roofline"])
     args = p.parse_args(argv)
 
     n_jobs = args.jobs or (300 if args.quick else 1500)
@@ -81,6 +85,13 @@ def main(argv=None):
                                "--scenarios", "2", "--iters", "1"])
         else:
             bench_engine.main([])
+    if want("pipeline"):
+        from benchmarks import bench_pipeline
+        if args.quick:
+            bench_pipeline.main(["--jobs", "128", "--policies", "64",
+                                 "--scenarios", "2", "--iters", "1"])
+        else:
+            bench_pipeline.main([])
     if want("learn"):
         from benchmarks import bench_learn
         if args.quick:

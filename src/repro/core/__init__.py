@@ -13,11 +13,23 @@ from repro.core.baselines import (
     spot_od_policies,
     sweep_policies,
 )
-from repro.core.dealloc import dealloc, expected_spot_work, window_sizes
+from repro.core.dealloc import (
+    dealloc,
+    expected_spot_work,
+    window_sizes,
+    window_sizes_batch,
+)
 from repro.core.market import SpotMarket
 from repro.core.policy import f_selfowned, selfowned_allocation, spot_ondemand_split
-from repro.core.pool import SelfOwnedPool
-from repro.core.scheduler import Policy, StreamCosts, evaluate_policy_fullpool, run_jobs
+from repro.core.pool import LazySegmentTree, SelfOwnedPool
+from repro.core.scheduler import (
+    Policy,
+    StreamCosts,
+    build_plans_batch,
+    evaluate_policy_fullpool,
+    job_arrays,
+    run_jobs,
+)
 from repro.core.simulate import simulate_tasks
 from repro.core.tola import cost_matrix, run_tola, run_tola_scenarios
 from repro.core.transform import chain_of, transform
@@ -27,7 +39,8 @@ from repro.core.workload import generate_chain_jobs, generate_dag_jobs
 __all__ = [
     "Allocation", "ChainJob", "DAGJob", "Task", "chain_from_arrays",
     "SpotMarket", "SelfOwnedPool", "Policy", "StreamCosts",
-    "dealloc", "window_sizes", "expected_spot_work",
+    "dealloc", "window_sizes", "window_sizes_batch", "expected_spot_work",
+    "build_plans_batch", "job_arrays", "LazySegmentTree",
     "f_selfowned", "selfowned_allocation", "spot_ondemand_split",
     "simulate_tasks", "run_jobs", "evaluate_policy_fullpool",
     "run_tola", "run_tola_scenarios", "cost_matrix", "transform", "chain_of",

@@ -17,11 +17,20 @@ is (Prop 4.2 / 4.5):
 
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
 from repro.core.types import Allocation, ChainJob
 
-__all__ = ["dealloc", "window_sizes", "expected_spot_work", "allocation_windows"]
+__all__ = [
+    "dealloc",
+    "window_sizes",
+    "window_sizes_batch",
+    "window_sizes_batch_jax",
+    "expected_spot_work",
+    "allocation_windows",
+]
 
 
 def window_sizes(job: ChainJob, x: float) -> np.ndarray:
@@ -59,6 +68,100 @@ def window_sizes(job: ChainJob, x: float) -> np.ndarray:
         # largest delta (it changes nothing in expectation — z_o stays z).
         sizes[order[0]] += omega
     return sizes
+
+
+def window_sizes_batch(
+    e: np.ndarray,
+    delta: np.ndarray,
+    mask: np.ndarray,
+    omega: np.ndarray,
+    xs: np.ndarray,
+) -> np.ndarray:
+    """Algorithm 1 over a whole (params x jobs) grid in one array pass.
+
+    ``e``/``delta``/``mask``: (J, L) padded task arrays (e = 0 off-mask);
+    ``omega``: (J,) per-job slack, computed by the caller exactly as the
+    sequential path does (``job.window - float(e.sum())``); ``xs``: (G,)
+    Dealloc parameters. Returns (G, J, L) window sizes, **bit-identical** to
+    looping ``window_sizes`` — the greedy waterfill runs as a short loop over
+    sorted task positions so every job sees the same float operations in the
+    same order as the sequential scan (a closed-form prefix-sum variant would
+    drift in the last ulp).
+    """
+    e = np.asarray(e, dtype=np.float64)
+    delta = np.asarray(delta, dtype=np.float64)
+    xs = np.asarray(xs, dtype=np.float64)
+    J, L = e.shape
+    G = len(xs)
+    if np.any((xs <= 0.0) | (xs > 1.0)):
+        bad = xs[(xs <= 0.0) | (xs > 1.0)][0]
+        raise ValueError(f"Dealloc parameter must be in (0, 1], got {bad}")
+    if np.any(omega < -1e-9):
+        raise ValueError("infeasible job: window < critical path")
+    omega = np.maximum(np.asarray(omega, dtype=np.float64), 0.0)
+
+    # Non-increasing delta among real tasks (stable, matching the sequential
+    # argsort(-delta)); padding sorts last and has cap 0 so it never takes
+    # slack — the residual parks on sorted position 0, the max-delta task.
+    order = np.argsort(np.where(mask, -delta, np.inf), axis=1, kind="stable")
+    e_s = np.take_along_axis(e, order, axis=1)                 # (J, L)
+    cap = e_s[None, :, :] / xs[:, None, None] - e_s[None, :, :]  # (G, J, L)
+    sizes_s = np.broadcast_to(e_s, (G, J, L)).copy()
+    rem = np.broadcast_to(omega, (G, J)).copy()
+    for k in range(L):
+        if not rem.any():
+            break  # slack exhausted everywhere: the rest is give = 0.0
+        give = np.minimum(cap[:, :, k], rem)
+        sizes_s[:, :, k] += give
+        rem -= give
+    sizes_s[:, :, 0] += rem  # all caps saturated: park residual on max delta
+    out = np.empty((G, J, L))
+    np.put_along_axis(out, np.broadcast_to(order[None], (G, J, L)), sizes_s,
+                      axis=2)
+    return out
+
+
+@functools.lru_cache(maxsize=1)
+def _window_sizes_batch_jit():
+    import jax
+    import jax.numpy as jnp
+
+    def batch(e, delta, mask, omega, xs):
+        G = xs.shape[0]
+        J, L = e.shape
+        order = jnp.argsort(jnp.where(mask, -delta, jnp.inf), axis=1,
+                            stable=True)
+        e_s = jnp.take_along_axis(e, order, axis=1)
+        cap = e_s[None] / xs[:, None, None] - e_s[None]
+
+        def give_one(rem, k):
+            give = jnp.minimum(cap[:, :, k], rem)
+            return rem - give, e_s[None, :, k] + give
+
+        rem0 = jnp.maximum(jnp.broadcast_to(omega, (G, J)), 0.0)
+        rem, cols = jax.lax.scan(give_one, rem0, jnp.arange(L))
+        sizes_s = jnp.moveaxis(cols, 0, 2)
+        sizes_s = sizes_s.at[:, :, 0].add(rem)
+        inv = jnp.argsort(order, axis=1)
+        return jnp.take_along_axis(
+            sizes_s, jnp.broadcast_to(inv[None], (G, J, L)), axis=2)
+
+    return jax.jit(batch)
+
+
+def window_sizes_batch_jax(e, delta, mask, omega, xs):
+    """Jitted twin of :func:`window_sizes_batch` (device dtype, usually f32).
+
+    Same greedy waterfill as the numpy canonical version, expressed as a
+    ``lax.scan`` over sorted task positions; used when the plan tensor is
+    built on-device. Parity with the f64 canonical path is float-level, not
+    bitwise (tested to ~1e-5 relative in tests/test_plan_batch.py).
+    """
+    import jax.numpy as jnp
+
+    return _window_sizes_batch_jit()(
+        jnp.asarray(e), jnp.asarray(delta), jnp.asarray(mask),
+        jnp.asarray(omega), jnp.asarray(xs))
 
 
 def expected_spot_work(

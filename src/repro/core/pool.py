@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["SelfOwnedPool"]
+__all__ = ["SelfOwnedPool", "LazySegmentTree"]
 
 
 class SelfOwnedPool:
@@ -63,6 +63,100 @@ class SelfOwnedPool:
         """Fraction of the pool's capacity that processed real workload."""
         cap = self.total * horizon
         return self.worked_instance_time / cap if cap > 0 else 0.0
+
+
+class LazySegmentTree:
+    """Range-add / range-max over integer occupancy, O(log n) per operation.
+
+    The saturated-regime workhorse of ``scheduler._allocate_pool``: when the
+    pool is deeply oversubscribed (r << demand) almost every optimistic chunk
+    fails and allocation degenerates into a per-task scan whose
+    ``used[k1:k2].max()`` rescans are O(span) each. This tree answers the
+    same query and commits the same grant in O(log n) exact integer
+    arithmetic, making the contended pass O(n log n) overall.
+
+    Iterative (bottom-up) lazy propagation over a flat 2n array of Python
+    ints — exactness matters more than numpy here: grants are integers, so
+    tree answers are bit-identical to the sequential occupancy scan, and the
+    per-op constant (~2 log n list reads) beats boxing numpy scalars.
+    """
+
+    def __init__(self, values: np.ndarray):
+        vals = [int(v) for v in values]
+        n = len(vals)
+        if n == 0:
+            raise ValueError("empty occupancy array")
+        self.n = n
+        self.h = n.bit_length()
+        self.t = t = [0] * n + vals
+        self.d = [0] * n
+        for i in range(n - 1, 0, -1):
+            l, r = 2 * i, 2 * i + 1
+            t[i] = t[l] if t[l] >= t[r] else t[r]
+
+    def _apply(self, x: int, v: int) -> None:
+        self.t[x] += v
+        if x < self.n:
+            self.d[x] += v
+
+    def _rebuild(self, p: int) -> None:
+        t, d = self.t, self.d
+        while p > 1:
+            p >>= 1
+            l, r = t[2 * p], t[2 * p + 1]
+            t[p] = (l if l >= r else r) + d[p]
+
+    def _push(self, p: int) -> None:
+        d = self.d
+        for s in range(self.h, 0, -1):
+            i = p >> s
+            if i >= 1 and d[i] != 0:
+                v = d[i]
+                self._apply(2 * i, v)
+                self._apply(2 * i + 1, v)
+                d[i] = 0
+
+    def add(self, lo: int, hi: int, v: int) -> None:
+        """Add ``v`` on slots [lo, hi)."""
+        if lo >= hi or v == 0:
+            return
+        l = lo + self.n
+        r = hi + self.n
+        ll, rr = l, r - 1
+        while l < r:
+            if l & 1:
+                self._apply(l, v)
+                l += 1
+            if r & 1:
+                r -= 1
+                self._apply(r, v)
+            l >>= 1
+            r >>= 1
+        self._rebuild(ll)
+        self._rebuild(rr)
+
+    def max(self, lo: int, hi: int) -> int:
+        """Max over slots [lo, hi); empty ranges give 0 (idle pool)."""
+        if lo >= hi:
+            return 0
+        l = lo + self.n
+        r = hi + self.n
+        self._push(l)
+        self._push(r - 1)
+        res = None
+        t = self.t
+        while l < r:
+            if l & 1:
+                if res is None or t[l] > res:
+                    res = t[l]
+                l += 1
+            if r & 1:
+                r -= 1
+                if res is None or t[r] > res:
+                    res = t[r]
+            l >>= 1
+            r >>= 1
+        return res
 
 
 class RangeMax:

@@ -32,10 +32,10 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.dealloc import window_sizes
+from repro.core.dealloc import window_sizes, window_sizes_batch
 from repro.core.market import SpotMarket
 from repro.core.policy import f_selfowned
-from repro.core.pool import SelfOwnedPool
+from repro.core.pool import LazySegmentTree, SelfOwnedPool
 from repro.core.simulate import simulate_chains_early, simulate_tasks
 from repro.core.types import ChainJob
 
@@ -43,7 +43,10 @@ __all__ = [
     "Policy",
     "StreamCosts",
     "PlanBatch",
+    "JobArrays",
+    "job_arrays",
     "build_plans",
+    "build_plans_batch",
     "run_jobs",
     "evaluate_policy_fullpool",
 ]
@@ -151,11 +154,125 @@ def build_plans(
                      delta=delta, mask=mask, bid=bid, beta0=beta0)
 
 
+@dataclasses.dataclass
+class JobArrays:
+    """Padded per-job task arrays — the policy-independent half of a plan.
+
+    Extracted ONCE per job stream (one cheap padding pass) and shared by
+    every window plan of a grid; ``omega`` is the Dealloc slack
+    ``window - e.sum()`` and ``slack_even`` the Even-benchmark slack
+    (``job.slack``, a Python-sum of e_i) — kept separate because the two
+    sequential paths reduce e differently and bit-compatibility requires
+    reproducing each exactly.
+    """
+
+    arrival: np.ndarray   # (J,)
+    z: np.ndarray         # (J, L) task workloads (0 on padding)
+    delta: np.ndarray     # (J, L) parallelism bounds (1 on padding)
+    e: np.ndarray         # (J, L) min execution times (0 on padding)
+    mask: np.ndarray      # (J, L) real-task mask
+    omega: np.ndarray     # (J,) Dealloc slack
+    l: np.ndarray         # (J,) chain lengths
+    jobs: list[ChainJob] | None = None  # source stream (Even-slack fallback)
+
+    def slack_even(self) -> np.ndarray:
+        """Even-benchmark slack per job (``job.slack``, the Python-sum
+        variant — reduced lazily because only the Even window mode needs it
+        and its per-task property walk is the costliest part of padding)."""
+        return np.array([j.slack for j in self.jobs])
+
+
+def job_arrays(jobs: list[ChainJob]) -> JobArrays:
+    """One flat extraction pass over the stream.
+
+    Task attributes come out as two flat list comprehensions (one array
+    construction each, not one per job) and scatter into the padded (J, L)
+    layout through the mask; ``e`` is the same IEEE divide as ``Task.e``
+    element for element, and ``omega`` reduces each job's own contiguous
+    e-row (identical length, identical pairwise sum) so everything stays
+    bit-compatible with the per-job ``build_plans`` path.
+    """
+    J = len(jobs)
+    ls = np.array([j.l for j in jobs], dtype=np.int64)
+    L = int(ls.max())
+    flat_z = np.array([t.z for j in jobs for t in j.tasks])
+    flat_d = np.array([t.delta for j in jobs for t in j.tasks])
+    mask = np.arange(L)[None, :] < ls[:, None]
+    z = np.zeros((J, L)); delta = np.ones((J, L))
+    z[mask] = flat_z
+    delta[mask] = flat_d
+    e = np.where(mask, z / delta, 0.0)
+    flat_e = flat_z / flat_d
+    off = np.concatenate([[0], np.cumsum(ls)])
+    arrival = np.array([j.arrival for j in jobs])
+    window = np.array([j.window for j in jobs])
+    omega = np.array([window[ji] - float(flat_e[off[ji]:off[ji + 1]].sum())
+                      for ji in range(J)])
+    return JobArrays(arrival=arrival, z=z, delta=delta, e=e, mask=mask,
+                     omega=omega, l=ls, jobs=jobs)
+
+
+def _plans_from_sizes(arrays: JobArrays, sizes: np.ndarray) -> list[PlanBatch]:
+    """(G, J, L) window sizes -> G padded PlanBatches (shared job arrays).
+
+    Padded sizes are exactly 0, so the cumulative bounds stay flat past the
+    chain end — starts == ends == the job deadline on padding, the same
+    invariant ``build_plans`` writes explicitly.
+    """
+    G, J, L = sizes.shape
+    cum = np.cumsum(sizes, axis=2)
+    ends = arrays.arrival[None, :, None] + cum
+    starts = np.empty_like(ends)
+    starts[:, :, 0] = arrays.arrival[None, :]
+    starts[:, :, 1:] = arrays.arrival[None, :, None] + cum[:, :, :-1]
+    nan = np.full(J, np.nan)
+    return [PlanBatch(arrival=arrays.arrival, starts=starts[g], ends=ends[g],
+                      z=arrays.z, delta=arrays.delta, mask=arrays.mask,
+                      bid=nan, beta0=nan)
+            for g in range(G)]
+
+
+def build_plans_batch(
+    jobs: list[ChainJob],
+    xs=(),
+    windows: str = "dealloc",
+    arrays: JobArrays | None = None,
+) -> list[PlanBatch]:
+    """Vectorized ``build_plans`` over a whole deduplicated parameter grid.
+
+    ``windows="dealloc"``: one PlanBatch per Dealloc parameter in ``xs``,
+    computed as a single (G, J, L) array pass (``window_sizes_batch``) —
+    bit-identical to looping ``build_plans`` per parameter.
+    ``windows="even"``: the parameter-free Even benchmark plan (``xs``
+    ignored, one PlanBatch). The returned plans carry NaN ``bid``/``beta0``
+    placeholders — they are window plans, not policy plans; callers supply
+    the policy-dependent fields (the engine's plan layer does).
+    """
+    a = arrays if arrays is not None else job_arrays(jobs)
+    if windows == "dealloc":
+        xs = np.atleast_1d(np.asarray(xs, dtype=np.float64))
+        if xs.size == 0:
+            raise ValueError("need at least one Dealloc parameter")
+        sizes = window_sizes_batch(a.e, a.delta, a.mask, a.omega, xs)
+    elif windows == "even":
+        per_task = np.maximum(a.slack_even(), 0.0) / a.l
+        sizes = np.where(a.mask, a.e + per_task[:, None], 0.0)[None]
+    else:
+        raise ValueError(f"unknown window mode {windows!r}")
+    return _plans_from_sizes(a, sizes)
+
+
 def _selfowned_counts_vec(
     z: np.ndarray, delta: np.ndarray, sizes: np.ndarray,
     beta0: np.ndarray | float | None, available, mode: str,
 ) -> np.ndarray:
-    """Integral r_i (policy (12) or the naive benchmark), vectorized."""
+    """Integral r_i (policy (12) or the naive benchmark), vectorized.
+
+    ``available`` may carry extra leading axes (e.g. a scenario axis for
+    per-scenario residual-availability queries); everything broadcasts and
+    the result takes the combined shape.
+    """
+    avail = np.asarray(available, dtype=np.float64)
     if mode == "prop12":
         if beta0 is None:
             return np.zeros_like(z)
@@ -164,10 +281,9 @@ def _selfowned_counts_vec(
         f = np.ceil(f_selfowned(z, delta, np.maximum(sizes, 1e-12), safe_b0) - 1e-9)
         f = np.where(np.isnan(b0), 0.0, f)
         useful = np.ceil(np.where(sizes > 0, z / np.maximum(sizes, 1e-12), 0.0) - 1e-9)
-        avail = np.broadcast_to(np.asarray(available, dtype=np.float64), z.shape)
-        return np.maximum(0.0, np.minimum.reduce([f, avail, delta, useful]))
+        return np.maximum(0.0, np.minimum(np.minimum(f, avail),
+                                          np.minimum(delta, useful)))
     if mode == "naive":
-        avail = np.broadcast_to(np.asarray(available, dtype=np.float64), z.shape)
         return np.maximum(0.0, np.minimum(avail, delta))
     raise ValueError(f"unknown self-owned mode {mode!r}")
 
@@ -193,8 +309,13 @@ def _allocate_pool(
     tentative value from both sides (the entry-occupancy grant is an upper
     bound on the sequential grant, and a feasible total leaves each prefix
     at least that much room). Only chunks whose members genuinely interact
-    (their combined writes would overfill some slot) fall back to the
-    per-task scan — allocation there is inherently order-dependent.
+    (their combined writes would overfill some slot) fall back to the exact
+    per-task order — allocation there is inherently order-dependent — which
+    runs on a lazy-add segment tree (``pool.LazySegmentTree``): each task is
+    one O(log n) range-max query + one O(log n) range-add instead of an
+    O(span) occupancy rescan, so a fully saturated stream costs O(n log n)
+    total. Grants are exact integers either way; the tree's pending deltas
+    are flushed back into the slot grid before any batched attempt reads it.
     """
     J, L = plan.z.shape
     r_alloc = np.zeros((J, L))
@@ -230,7 +351,17 @@ def _allocate_pool(
     capl, spanl, zfl = cap.tolist(), spans.tolist(), zf.tolist()
     reserved_t = worked_t = 0.0
     cooldown = 0  # chunks to run sequentially after a failed batch attempt
+    tree: LazySegmentTree | None = None
+    tdiff: np.ndarray | None = None  # grants pending flush into `used`
     from repro.core.pool import RangeMax
+
+    def _flush() -> None:
+        """Fold the tree stretch's grants back into the slot grid."""
+        nonlocal tree, tdiff
+        if tree is not None:
+            used[:] += np.cumsum(tdiff[:-1])
+            tree = None
+            tdiff = None
 
     for pos in range(0, len(order), _POOL_CHUNK):
         sel = order[pos:pos + _POOL_CHUNK]
@@ -241,6 +372,7 @@ def _allocate_pool(
         if cooldown > 0:
             cooldown -= 1
         else:
+            _flush()
             lo = int(k1s[sel].min())
             hi = int(k2s[sel].max())
             m0 = RangeMax(used[lo:hi]).query(k1s[sel] - lo, k2s[sel] - lo)
@@ -259,23 +391,29 @@ def _allocate_pool(
                 continue
             # Contended chunk: tasks the entry occupancy leaves no room for
             # provably get r == 0 (occupancy only grows within the chunk),
-            # so the exact scan below only visits the rest; back off from
+            # so the exact order below only visits the rest; back off from
             # batch attempts while the stream stays saturated.
             run = sel[m0 <= total - 1]
             cooldown = 4
+        if len(run) and tree is None:
+            tree = LazySegmentTree(used)
+            tdiff = np.zeros(len(used) + 1, dtype=np.int64)
         for i in run.tolist():
             k1, k2 = k1l[i], k2l[i]
-            avail = total - int(used[k1:k2].max())
+            avail = total - tree.max(k1, k2)
             c = capl[i]
             r = int(c) if c <= avail else avail
             if r > 0:
-                used[k1:k2] += r
+                tree.add(k1, k2, r)
+                tdiff[k1] += r
+                tdiff[k2] -= r
                 span = spanl[i]
                 reserved_t += r * span
                 worked = r * span
                 zfi = zfl[i]
                 worked_t += zfi if zfi < worked else worked
                 out[i] = r
+    _flush()
     pool.reserved_instance_time += reserved_t
     pool.worked_instance_time += worked_t
     r_alloc.ravel()[flat] = out

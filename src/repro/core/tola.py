@@ -107,6 +107,35 @@ def _residual_availability(pool, r_total: int, slot: float):
     return query
 
 
+def _stream_meta(jobs: list[ChainJob]):
+    """(arrivals, d, Z) of an arrival-ordered stream, validated."""
+    arrivals = np.array([j.arrival for j in jobs])
+    if np.any(np.diff(arrivals) < -1e-9):
+        raise ValueError("jobs must be arrival-ordered")
+    d = max(j.deadline - j.arrival for j in jobs)
+    Z = np.array([j.total_work for j in jobs])
+    return arrivals, d, Z
+
+
+def _tola_round(jobs, policies, C, arrivals, d, Z, spec, rng, market,
+                r_total, windows, selfowned, early_start):
+    """One Alg.-4 round for one scenario: replay the learner over C, run the
+    sampled policies against the shared pool, return the realized residual-
+    availability query for the next refinement."""
+    from repro.learn import replay as learn_replay
+
+    lr = learn_replay(C, arrivals, d, workload=Z, learners=[spec],
+                      rng=rng, backend="numpy")
+    chosen = lr.chosen[0, 0]
+    plan = build_plans(jobs, [policies[c] for c in chosen], r_total, windows)
+    r_alloc, pool = _allocate_pool(plan, r_total, selfowned,
+                                   market.slots_per_unit)
+    realized = _simulate_plan(plan, r_alloc, market, early_start)
+    availability = None if pool is None else \
+        _residual_availability(pool, r_total, market.slot)
+    return lr, chosen, realized, availability
+
+
 def run_tola(
     jobs: list[ChainJob],
     policies: list[Policy],
@@ -135,19 +164,13 @@ def run_tola(
     ``repro.learn`` — Hedge there is bit-compatible with the original
     in-module loop); ``learner`` is a kind name or ``LearnerSpec`` from
     ``repro.learn.learners``. ``_C0`` optionally injects a precomputed
-    iteration-0 matrix (used by ``run_tola_scenarios`` to batch matrices
-    across scenarios in one engine pass).
+    iteration-0 matrix (used to share a batched engine pass).
     """
     from repro.learn import as_spec
-    from repro.learn import replay as learn_replay
 
     if not jobs or not policies:
         raise ValueError("need jobs and policies")
-    arrivals = np.array([j.arrival for j in jobs])
-    if np.any(np.diff(arrivals) < -1e-9):
-        raise ValueError("jobs must be arrival-ordered")
-    d = max(j.deadline - j.arrival for j in jobs)
-    Z = np.array([j.total_work for j in jobs])
+    arrivals, d, Z = _stream_meta(jobs)
     spec = as_spec(learner)
     rng = np.random.default_rng(seed)
 
@@ -159,17 +182,9 @@ def run_tola(
         else:
             C = cost_matrix(jobs, policies, market, r_total, windows,
                             selfowned, early_start, availability, backend)
-        lr = learn_replay(C, arrivals, d, workload=Z, learners=[spec],
-                          rng=rng, backend="numpy")
-        chosen = lr.chosen[0, 0]
-
-        # Realized pass: per-job sampled policies against the shared pool.
-        plan = build_plans(jobs, [policies[c] for c in chosen], r_total, windows)
-        r_alloc, pool = _allocate_pool(plan, r_total, selfowned,
-                                       market.slots_per_unit)
-        realized = _simulate_plan(plan, r_alloc, market, early_start)
-        if pool is not None:
-            availability = _residual_availability(pool, r_total, market.slot)
+        lr, chosen, realized, availability = _tola_round(
+            jobs, policies, C, arrivals, d, Z, spec, rng, market,
+            r_total, windows, selfowned, early_start)
 
     fixed = (C * Z[:, None]).sum(axis=0) / Z.sum()
     return TolaResult(chosen=chosen, weights=lr.weights[0, 0],
@@ -192,22 +207,46 @@ def run_tola_scenarios(
 ) -> list[TolaResult]:
     """Algorithm 4 across S market scenarios, cost matrices batched.
 
-    The counterfactual matrices of ALL scenarios are computed in one
-    ``evaluate_grid`` pass (the engine's scenario axis); the sequential
-    sample/update replay then runs per scenario with seed ``seed + s``.
-    Pool-aware refinements (r_total > 0) re-score per scenario, since the
-    realized residual availability is scenario-specific.
+    Exactly ONE ``evaluate_grid`` call per refinement round, covering every
+    scenario: round 0 is the engine's ordinary scenario axis; each pool
+    refinement re-scores the grid against the S realized residual-
+    availability queries in a single per-scenario-availability pass (the
+    engine stacks the refined plan tensors along the scenario axis).
+    The sequential sample/update replay runs per scenario with seed
+    ``seed + s`` — bit-identical to looping single-market ``run_tola``
+    (Table 6 output included), just without the per-scenario engine calls.
     """
     from repro.engine import evaluate_grid
+    from repro.learn import as_spec
 
-    res = evaluate_grid(
-        jobs, policies, markets, r_total, windows=windows,
-        selfowned=selfowned, early_start=early_start, pool="dedicated",
-        backend=backend)
+    if not jobs or not policies:
+        raise ValueError("need jobs and policies")
+    S = len(markets)
+    arrivals, d, Z = _stream_meta(jobs)
+    spec = as_spec(learner)
+    rngs = [np.random.default_rng(seed + s) for s in range(S)]
+
+    avails: list | None = None
+    iters = 1 + (pool_iters if r_total > 0 else 0)
+    for it in range(iters):
+        res = evaluate_grid(
+            jobs, policies, markets, r_total, windows=windows,
+            selfowned=selfowned, early_start=early_start, pool="dedicated",
+            availability=avails, backend=backend)
+        C = res.unit_cost
+        rounds = [
+            _tola_round(jobs, policies, C[s], arrivals, d, Z, spec, rngs[s],
+                        markets[s], r_total, windows, selfowned, early_start)
+            for s in range(S)
+        ]
+        avails = [r[3] for r in rounds]
+        if any(a is None for a in avails):
+            avails = None  # r_total == 0: nothing to refine against
+
     return [
-        run_tola(jobs, policies, m, r_total, seed=seed + s, windows=windows,
-                 selfowned=selfowned, early_start=early_start,
-                 pool_iters=pool_iters, backend=backend, learner=learner,
-                 _C0=res.unit_cost[s])
-        for s, m in enumerate(markets)
+        TolaResult(chosen=chosen, weights=lr.weights[0, 0],
+                   realized=realized, cost_matrix=C[s],
+                   fixed_unit_costs=(C[s] * Z[:, None]).sum(axis=0) / Z.sum(),
+                   learn=lr)
+        for s, (lr, chosen, realized, _) in enumerate(rounds)
     ]

@@ -5,8 +5,8 @@ across policies x bids x market scenarios and dispatches to a backend:
 
 * ``numpy``  — float64 closed-form simulators from ``core/`` (exact oracle);
 * ``jax``    — vectorized jnp (``kernels/ref.py``), scenario axis vmapped;
-* ``pallas`` — the ``policy_cost_chain`` TPU kernel, one launch per bid
-  covering the whole (scenario x policy x job) grid;
+* ``pallas`` — the ``policy_cost_chain`` TPU kernel, ONE launch covering
+  the whole (bid x scenario x policy x job) sweep;
 * ``auto``   — pallas on TPU/GPU, numpy otherwise.
 
 All backends consume the same deduplicated ``GridPlan`` (see ``plan.py``)
@@ -17,6 +17,7 @@ cell (tests/test_engine.py).
 from __future__ import annotations
 
 import os
+import time
 from typing import Callable, Sequence
 
 import numpy as np
@@ -70,7 +71,7 @@ def evaluate_grid(
     selfowned: str = "prop12",
     early_start: bool = True,
     pool: str = "dedicated",
-    availability: Callable | None = None,
+    availability: Callable | Sequence[Callable] | None = None,
     backend: str = "auto",
     interpret: bool | None = None,
 ) -> EngineResult:
@@ -84,10 +85,12 @@ def evaluate_grid(
 
     ``pool`` selects the self-owned semantics: "dedicated" is the
     counterfactual evaluator (TOLA / Alg. 4 scoring, optionally against a
-    realized ``availability`` query), "shared" replays the chronological
-    shared-pool allocation per policy (fixed-policy sweep semantics of
-    ``run_jobs``). ``interpret`` forces/forbids pallas interpret mode
-    (default: interpret off-TPU).
+    realized ``availability`` query — one callable, or a list of S
+    per-scenario callables for scenario-batched pool refinement, in which
+    case the self-owned stats gain a leading scenario axis), "shared"
+    replays the chronological shared-pool allocation per policy
+    (fixed-policy sweep semantics of ``run_jobs``). ``interpret``
+    forces/forbids pallas interpret mode (default: interpret off-TPU).
     """
     if not jobs:
         raise ValueError("need at least one job")
@@ -99,6 +102,11 @@ def evaluate_grid(
     if not market_list:
         raise ValueError("need at least one market scenario")
     check_scenarios(market_list)
+    if isinstance(availability, (list, tuple)) \
+            and len(availability) != len(market_list):
+        raise ValueError(
+            f"per-scenario availability needs one query per scenario "
+            f"({len(availability)} queries, {len(market_list)} scenarios)")
 
     backend = resolve_backend(backend)
     gplan = build_grid_plan(
@@ -109,6 +117,7 @@ def evaluate_grid(
     S, J, P = len(market_list), gplan.n_jobs, gplan.n_policies
     out = {k: np.zeros((S, J, P)) for k in
            ("spot_cost", "ondemand_cost", "spot_work", "ondemand_work")}
+    t0 = time.perf_counter()
     if backend == "numpy":
         from repro.engine import backend_numpy
         backend_numpy.run(gplan, market_list, early_start, out)
@@ -119,12 +128,18 @@ def evaluate_grid(
         from repro.engine import backend_pallas
         backend_pallas.run(gplan, market_list, early_start, out,
                            interpret=interpret)
+    eval_seconds = time.perf_counter() - t0
 
-    selfowned_work = np.zeros((J, P))
-    selfowned_reserved = np.zeros((J, P))
+    per_scenario = gplan.per_scenario
+    so_shape = (S, J, P) if per_scenario else (J, P)
+    selfowned_work = np.zeros(so_shape)
+    selfowned_reserved = np.zeros(so_shape)
     for g in gplan.groups:
-        selfowned_work[:, g.policy_idx] = g.selfowned_work[:, None]
-        selfowned_reserved[:, g.policy_idx] = g.selfowned_reserved[:, None]
+        sw, sr = g.selfowned_work, g.selfowned_reserved
+        if per_scenario and not g.per_scenario:
+            sw, sr = np.broadcast_to(sw, (S, J)), np.broadcast_to(sr, (S, J))
+        selfowned_work[..., g.policy_idx] = sw[..., None]
+        selfowned_reserved[..., g.policy_idx] = sr[..., None]
 
     total = out["spot_cost"] + out["ondemand_cost"]
     unit = total / np.maximum(gplan.workload, 1e-12)[None, :, None]
@@ -139,4 +154,6 @@ def evaluate_grid(
         selfowned_reserved=selfowned_reserved,
         backend=backend,
         single_market=single,
+        timings={"plan": gplan.plan_seconds, "pool": gplan.pool_seconds,
+                 "eval": eval_seconds},
     )

@@ -7,6 +7,12 @@ the stacked cumulative arrays, and the chain recurrence runs as a
 Float32 (matches the pallas kernel); the numpy backend is the float64
 oracle.
 
+When the grid plan was built against per-scenario availability queries
+(TOLA's batched pool refinement) the self-owned arrays (z_t, d_eff, pins)
+are (S, R, L) stacks and the ``_ps`` entry points vmap them alongside the
+market arrays; the common scenario-shared case keeps them closed over
+(one host->device copy, no S-fold broadcast).
+
 The jitted entry points live at module scope and take every plan array as
 a traced argument, so repeated ``evaluate_grid`` calls reuse the compile
 cache (one compilation per distinct batch shape, not per call).
@@ -18,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.engine.plan import scenario_cat
 from repro.engine.scenarios import stack_views
 from repro.kernels.ref import chain_costs_ref, policy_cost_ref
 
@@ -35,6 +42,16 @@ def _chain_batch(A, C, arrival, ends, z_t, d_eff, pins, p_od, slot):
 
 
 @jax.jit
+def _chain_batch_ps(A, C, arrival, ends, z_t, d_eff, pins, p_od, slot):
+    """Per-scenario-plan edition: z_t/d_eff/pins are (S, R, L) stacks."""
+    fn = jax.vmap(
+        lambda a, c, z, d, p: chain_costs_ref(a, c, arrival, ends, z, d, p,
+                                              p_od=p_od, slot=slot),
+        in_axes=(0, 0, 0, 0, 0))
+    return fn(A, C, z_t, d_eff, pins)
+
+
+@jax.jit
 def _task_batch(A, C, starts, ends, z_t, d_eff, p_od, slot):
     """Planned-start (per-task) edition -> dict of (S, R*L)."""
     fn = jax.vmap(
@@ -44,10 +61,22 @@ def _task_batch(A, C, starts, ends, z_t, d_eff, p_od, slot):
     return fn(A, C)
 
 
+@jax.jit
+def _task_batch_ps(A, C, starts, ends, z_t, d_eff, p_od, slot):
+    """Planned-start with per-scenario (S, R*L) cloud workloads."""
+    fn = jax.vmap(
+        lambda a, c, z, d: policy_cost_ref(a, c, starts, ends, z, d,
+                                           p_od=p_od, slot=slot),
+        in_axes=(0, 0, 0, 0))
+    return fn(A, C, z_t, d_eff)
+
+
 def run(gplan, markets, early_start: bool, out) -> None:
     slot = markets[0].slot
     p_od = markets[0].p_ondemand
     J = gplan.n_jobs
+    S = len(markets)
+    ps = gplan.per_scenario
     f32 = lambda a: jnp.asarray(a, jnp.float32)
 
     for bid in gplan.bids:
@@ -55,19 +84,36 @@ def run(gplan, markets, early_start: bool, out) -> None:
         A, C = stack_views(markets, bid)        # (S, n_slots+1)
         A, C = f32(A), f32(C)
         ends = np.concatenate([g.plan.ends for g in groups])
-        z_t = np.concatenate([g.z_t for g in groups])
-        d_eff = np.concatenate([g.d_eff for g in groups])
+        if ps:
+            z_t = scenario_cat(groups, "z_t", S)
+            d_eff = scenario_cat(groups, "d_eff", S)
+        else:
+            z_t = np.concatenate([g.z_t for g in groups])
+            d_eff = np.concatenate([g.d_eff for g in groups])
         if early_start:
-            pins = np.concatenate([g.pins for g in groups])
             arrival = np.tile(gplan.arrival, len(groups))
-            res = _chain_batch(A, C, f32(arrival), f32(ends), f32(z_t),
-                               f32(d_eff), jnp.asarray(pins), p_od, slot)
+            if ps:
+                pins = scenario_cat(groups, "pins", S)
+                res = _chain_batch_ps(A, C, f32(arrival), f32(ends),
+                                      f32(z_t), f32(d_eff),
+                                      jnp.asarray(pins), p_od, slot)
+            else:
+                pins = np.concatenate([g.pins for g in groups])
+                res = _chain_batch(A, C, f32(arrival), f32(ends), f32(z_t),
+                                   f32(d_eff), jnp.asarray(pins), p_od, slot)
         else:
             starts = np.concatenate([g.plan.starts for g in groups])
             R, L = ends.shape
-            flat = lambda a: f32(a).reshape(R * L)
-            res = _task_batch(A, C, flat(starts), flat(ends), flat(z_t),
-                              flat(d_eff), p_od, slot)
+            if ps:
+                res = _task_batch_ps(
+                    A, C, f32(starts.ravel()), f32(ends.ravel()),
+                    f32(z_t.reshape(S, R * L)),
+                    f32(d_eff.reshape(S, R * L)), p_od, slot)
+            else:
+                res = _task_batch(
+                    A, C, f32(starts.ravel()), f32(ends.ravel()),
+                    f32(z_t.reshape(R * L)), f32(d_eff.reshape(R * L)),
+                    p_od, slot)
             res = {k: v.reshape(len(markets), R, L).sum(axis=2)
                    for k, v in res.items() if k != "finish"}
         shape = (len(markets), len(groups), J)

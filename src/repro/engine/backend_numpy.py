@@ -22,17 +22,22 @@ def run(gplan, markets, early_start: bool, out) -> None:
         for g in gplan.groups:
             view = market.view(float(g.bid))
             plan = g.plan
+            # Self-owned arrays are (S, J, L) when the caller supplied
+            # per-scenario availability queries; scenario s sees slice s.
+            z_t = g.z_t[s] if g.per_scenario else g.z_t
+            d_eff = g.d_eff[s] if g.per_scenario else g.d_eff
+            pins = g.pins[s] if g.per_scenario else g.pins
             if early_start:
                 sim = simulate_chains_early(
-                    view, plan.arrival, plan.ends, g.z_t, g.d_eff,
-                    selfowned_pins=g.pins, p_ondemand=market.p_ondemand)
+                    view, plan.arrival, plan.ends, z_t, d_eff,
+                    selfowned_pins=pins, p_ondemand=market.p_ondemand)
                 sc, oc = sim.spot_cost, sim.ondemand_cost
                 sw, ow = sim.spot_work, sim.ondemand_work
             else:
                 fl = plan.mask.ravel()
                 sim = simulate_tasks(
                     view, plan.starts.ravel()[fl], plan.ends.ravel()[fl],
-                    g.z_t.ravel()[fl], g.d_eff.ravel()[fl],
+                    z_t.ravel()[fl], d_eff.ravel()[fl],
                     market.p_ondemand)
                 owner = np.repeat(np.arange(gplan.n_jobs),
                                   plan.mask.sum(axis=1))

@@ -1,11 +1,12 @@
 """Pallas-kernel backend — the TPU fast path.
 
 Early-start grids go through ``kernels/policy_cost.py::policy_cost_chain``:
-ONE kernel launch per bid covers the whole (scenario x policy x job) grid —
-scenarios are a grid dimension selecting the VMEM-resident cumulative
-arrays, (policy, job) cells are flattened rows, and the chain recurrence
-runs inside the kernel. Planned-start grids (early_start=False) use the
-original per-task ``policy_cost`` kernel on the flattened task batch.
+ONE kernel launch covers the whole (bid x scenario x policy x job) sweep —
+bids and scenarios are grid dimensions selecting the VMEM-resident
+cumulative arrays, (policy, job) cells are flattened rows (zero-padded to
+the widest bid), and the chain recurrence runs inside the kernel. Planned-
+start grids (early_start=False) use the original per-task ``policy_cost``
+kernel on the flattened task batch.
 
 Off-TPU the kernels run in interpret mode (slow, parity-testing only);
 ``interpret`` can be forced either way.
@@ -15,6 +16,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.engine.plan import scenario_cat
 from repro.engine.scenarios import stack_views
 
 __all__ = ["run"]
@@ -33,41 +35,83 @@ def run(gplan, markets, early_start: bool, out, interpret: bool | None = None,
     p_od = markets[0].p_ondemand
     J = gplan.n_jobs
     S = len(markets)
+    L = gplan.L
+    bids = gplan.bids
+    groups_per_bid = [gplan.groups_for_bid(b) for b in bids]
 
-    for bid in gplan.bids:
-        groups = gplan.groups_for_bid(bid)
+    if early_start:
+        # Stack every bid's row batch into one (B, R_max, L) tensor (rows
+        # zero-padded past the bid's own groups) -> ONE kernel launch for
+        # the whole sweep.
+        B = len(bids)
+        per_scenario = gplan.per_scenario
+        R_max = max(len(gs) for gs in groups_per_bid) * J
+        A = np.zeros((B, S, markets[0].n_slots + 1), np.float32)
+        C = np.zeros_like(A)
+        arrival = np.zeros((B, R_max))
+        ends = np.zeros((B, R_max, L))
+        pshape = (B, S, R_max, L) if per_scenario else (B, R_max, L)
+        z_t = np.zeros(pshape)
+        d_eff = np.zeros(pshape)
+        pins = np.zeros(pshape, dtype=bool)
+        for bi, (bid, groups) in enumerate(zip(bids, groups_per_bid)):
+            A[bi], C[bi] = stack_views(markets, bid)
+            R = len(groups) * J
+            arrival[bi, :R] = np.tile(gplan.arrival, len(groups))
+            ends[bi, :R] = np.concatenate([g.plan.ends for g in groups])
+            if per_scenario:
+                sl = (bi, slice(None), slice(0, R))
+                cat = lambda attr: scenario_cat(groups, attr, S)
+            else:
+                sl = (bi, slice(0, R))
+                cat = lambda attr: np.concatenate(
+                    [getattr(g, attr) for g in groups])
+            z_t[sl] = cat("z_t")
+            d_eff[sl] = cat("d_eff")
+            pins[sl] = cat("pins")
+        res = policy_cost_chain(
+            A, C, arrival, ends, z_t, d_eff, pins, slot=slot, p_od=p_od,
+            block_rows=block_rows, interpret=interpret)
+        for key in ("spot_cost", "ondemand_cost", "spot_work",
+                    "ondemand_work"):
+            vals = np.asarray(res[key], np.float64)     # (B, S, R_max)
+            for bi, groups in enumerate(groups_per_bid):
+                per_g = vals[bi, :, :len(groups) * J].reshape(
+                    S, len(groups), J)
+                for gi, g in enumerate(groups):
+                    out[key][:, :, g.policy_idx] = per_g[:, gi, :, None]
+        return
+
+    for bid, groups in zip(bids, groups_per_bid):
         A, C = stack_views(markets, bid)        # (S, n_slots+1)
+        starts = np.concatenate([g.plan.starts for g in groups])
         ends = np.concatenate([g.plan.ends for g in groups])
-        z_t = np.concatenate([g.z_t for g in groups])
-        d_eff = np.concatenate([g.d_eff for g in groups])
-        if early_start:
-            pins = np.concatenate([g.pins for g in groups])
-            arrival = np.tile(gplan.arrival, len(groups))
-            res = policy_cost_chain(
-                A, C, arrival, ends, z_t, d_eff, pins, slot=slot, p_od=p_od,
-                block_rows=block_rows, interpret=interpret)
-            vals = {k: np.asarray(v, np.float64).reshape(
-                        S, len(groups), J) for k, v in res.items()}
+        R, L = ends.shape
+        if gplan.per_scenario:
+            z_all = scenario_cat(groups, "z_t", S)       # (S, R, L)
+            d_all = scenario_cat(groups, "d_eff", S)
         else:
-            starts = np.concatenate([g.plan.starts for g in groups])
-            R, L = ends.shape
+            z_one = np.concatenate([g.z_t for g in groups])
+            d_one = np.concatenate([g.d_eff for g in groups])
+        per_s = []
+        for s in range(S):
+            z_t = z_all[s] if gplan.per_scenario else z_one
+            d_eff = d_all[s] if gplan.per_scenario else d_one
             flat = lambda a: jnp.asarray(a.reshape(R * L), jnp.float32)
-            per_s = []
-            for s in range(S):
-                r = policy_cost(
-                    jnp.asarray(A[s], jnp.float32),
-                    jnp.asarray(C[s], jnp.float32),
-                    flat(starts), flat(ends), flat(z_t), flat(d_eff),
-                    slot=slot, p_od=p_od, interpret=interpret)
-                r["ondemand_work"] = (
-                    r["ondemand_cost"] / p_od if p_od > 0
-                    else jnp.maximum(flat(z_t) - r["spot_work"], 0.0)
-                    * (flat(z_t) > 1e-15))
-                per_s.append({k: np.asarray(v, np.float64)
-                              .reshape(len(groups), J, L).sum(axis=2)
-                              for k, v in r.items() if k != "finish"})
-            vals = {k: np.stack([p[k] for p in per_s])
-                    for k in per_s[0]}
+            r = policy_cost(
+                jnp.asarray(A[s], jnp.float32),
+                jnp.asarray(C[s], jnp.float32),
+                flat(starts), flat(ends), flat(z_t), flat(d_eff),
+                slot=slot, p_od=p_od, interpret=interpret)
+            r["ondemand_work"] = (
+                r["ondemand_cost"] / p_od if p_od > 0
+                else jnp.maximum(flat(z_t) - r["spot_work"], 0.0)
+                * (flat(z_t) > 1e-15))
+            per_s.append({k: np.asarray(v, np.float64)
+                          .reshape(len(groups), J, L).sum(axis=2)
+                          for k, v in r.items() if k != "finish"})
+        vals = {k: np.stack([p[k] for p in per_s])
+                for k in per_s[0]}
         for key in ("spot_cost", "ondemand_cost", "spot_work",
                     "ondemand_work"):
             v = vals[key]

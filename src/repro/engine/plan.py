@@ -2,23 +2,34 @@
 
 Turns (jobs x policies) into a deduplicated batch of *evaluation groups*.
 The key observation: the padded ``PlanBatch`` (the canonical interchange
-type, built by ``build_plans``/``window_sizes``) depends on a policy only
-through its Dealloc parameter, the self-owned allocation only through
-(plan, beta_0), and the market realization additionally through the bid.
-Policies sharing the triple (window key, beta_0, bid) are therefore EXACT
-duplicates of one another and collapse into one group — the paper's
-C1 x C2 x B grid of 175 policies reduces to 35 distinct evaluations
-because every beta >= beta_0 drives Dealloc with beta_0 (Alg. 2 lines 1-5).
+type) depends on a policy only through its Dealloc parameter, the
+self-owned allocation only through (plan, beta_0), and the market
+realization additionally through the bid. Policies sharing the triple
+(window key, beta_0, bid) are therefore EXACT duplicates of one another
+and collapse into one group — the paper's C1 x C2 x B grid of 175 policies
+reduces to 35 distinct evaluations because every beta >= beta_0 drives
+Dealloc with beta_0 (Alg. 2 lines 1-5).
+
+The plan layer is itself part of the array program: the window plans for
+ALL distinct Dealloc parameters come out of ONE vectorized
+``build_plans_batch`` pass over the padded (G, J, L) tensor
+(``core.dealloc.window_sizes_batch``, bit-identical to the legacy per-job
+loop), so plan construction scales with the deduplicated grid, not with
+n_policies x n_jobs Python iterations.
 
 Every backend (numpy / jax / pallas) consumes the same ``GridPlan``; all
 market-independent arithmetic (self-owned counts, cloud residual workloads,
 pins) happens here exactly once, in float64 numpy, so backends only differ
-in how they realize the spot market.
+in how they realize the spot market. When ``availability`` is a *list* of
+per-scenario queries (TOLA's batched pool refinement), the self-owned
+arrays gain a leading scenario axis — groups carry (S, J, L) tensors and
+backends pair scenario s with slice s.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
@@ -27,11 +38,23 @@ from repro.core.scheduler import (
     Policy,
     _allocate_pool,
     _selfowned_counts_vec,
-    build_plans,
+    build_plans_batch,
+    job_arrays,
 )
 from repro.core.types import ChainJob
 
-__all__ = ["EvalGroup", "GridPlan", "build_grid_plan"]
+__all__ = ["EvalGroup", "GridPlan", "build_grid_plan", "scenario_cat",
+           "distinct_window_params"]
+
+
+def scenario_cat(groups, attr: str, S: int) -> np.ndarray:
+    """Concatenate a group attribute into an (S, R, L) scenario-major stack,
+    broadcasting groups whose arrays are scenario-independent — the one
+    place the per-scenario/shared mixing rule lives (both the jax and the
+    pallas backend consume it)."""
+    return np.concatenate(
+        [np.broadcast_to(getattr(g, attr),
+                         (S,) + g.plan.ends.shape) for g in groups], axis=1)
 
 
 @dataclasses.dataclass
@@ -39,18 +62,24 @@ class EvalGroup:
     """One distinct (window plan, beta_0, bid) evaluation cell.
 
     ``policy_idx`` lists every policy of the original grid that this group
-    realizes; all (J, L) arrays are market-independent.
+    realizes. The self-owned arrays are (J, L) when market-independent and
+    (S, J, L) when the caller supplied per-scenario availability queries
+    (``per_scenario`` distinguishes the two).
     """
 
     plan: PlanBatch
     policy_idx: np.ndarray   # (k,) columns of the cost matrix this fills
     bid: float
-    r_alloc: np.ndarray      # (J, L) self-owned instances per task
-    z_t: np.ndarray          # (J, L) cloud workload after self-owned
-    d_eff: np.ndarray        # (J, L) cloud parallelism after self-owned
-    pins: np.ndarray         # (J, L) bool — tasks holding reservations
-    selfowned_work: np.ndarray      # (J,)
-    selfowned_reserved: np.ndarray  # (J,)
+    r_alloc: np.ndarray      # (J, L) | (S, J, L) self-owned instances
+    z_t: np.ndarray          # (J, L) | (S, J, L) cloud workload after s-o
+    d_eff: np.ndarray        # (J, L) | (S, J, L) cloud parallelism after s-o
+    pins: np.ndarray         # bool — tasks holding reservations
+    selfowned_work: np.ndarray      # (J,) | (S, J)
+    selfowned_reserved: np.ndarray  # (J,) | (S, J)
+
+    @property
+    def per_scenario(self) -> bool:
+        return self.z_t.ndim == 3
 
 
 @dataclasses.dataclass
@@ -65,10 +94,16 @@ class GridPlan:
     n_jobs: int
     n_policies: int
     L: int
+    plan_seconds: float = 0.0   # window-plan tensor construction
+    pool_seconds: float = 0.0   # self-owned allocation + residuals
 
     @property
     def bids(self) -> list[float]:
         return sorted({g.bid for g in self.groups})
+
+    @property
+    def per_scenario(self) -> bool:
+        return any(g.per_scenario for g in self.groups)
 
     def groups_for_bid(self, bid: float) -> list[EvalGroup]:
         return [g for g in self.groups if g.bid == bid]
@@ -80,16 +115,33 @@ def _window_key(policy: Policy, r_total: int, windows: str):
     return ("dealloc", round(policy.dealloc_param(r_total), 12))
 
 
+def distinct_window_params(policies, r_total: int,
+                           windows: str = "dealloc") -> dict[tuple, float]:
+    """Window-key dedup of a policy grid: {window key -> exact Dealloc param
+    of the FIRST policy carrying it} in first-appearance order (the rounded
+    key only dedups; the plan is always built from the exact parameter).
+    The single source of the dedup rule — the engine, the pipeline
+    benchmark, and the bit-compat tests all measure the same grid."""
+    key_param: dict[tuple, float] = {}
+    for pol in policies:
+        wkey = _window_key(pol, r_total, windows)
+        if wkey not in key_param:
+            key_param[wkey] = (pol.dealloc_param(r_total)
+                               if windows != "even" else 0.0)
+    return key_param
+
+
 def _cloud_residuals(plan: PlanBatch, r_alloc: np.ndarray):
     """The market-independent tail of ``_simulate_plan``: residual cloud
-    workload (dust-killed), effective parallelism, pins, self-owned stats."""
+    workload (dust-killed), effective parallelism, pins, self-owned stats.
+    ``r_alloc`` may carry a leading scenario axis; everything broadcasts."""
     sizes = plan.sizes
     z_t = np.maximum(plan.z - r_alloc * sizes, 0.0)
     z_t[z_t <= 1e-9 * (plan.z + 1.0)] = 0.0
     d_eff = np.maximum(plan.delta - r_alloc, 0.0)
     selfowned = np.minimum(r_alloc * sizes, plan.z)
-    return z_t, d_eff, r_alloc > 0, selfowned.sum(axis=1), \
-        (r_alloc * sizes).sum(axis=1)
+    return z_t, d_eff, r_alloc > 0, selfowned.sum(axis=-1), \
+        (r_alloc * sizes).sum(axis=-1)
 
 
 def build_grid_plan(
@@ -106,21 +158,33 @@ def build_grid_plan(
 
     ``pool="dedicated"`` scores each policy against an uncontended pool (the
     counterfactual evaluator TOLA uses; ``availability`` optionally replaces
-    the constant ``r_total`` with a realized residual-occupancy query).
+    the constant ``r_total`` with a realized residual-occupancy query, or a
+    LIST of per-scenario queries — one per market scenario of the batch —
+    for scenario-batched pool refinement).
     ``pool="shared"`` replays the chronological shared-pool allocation per
     policy (the realized ``run_jobs`` semantics used by fixed-policy sweeps).
     """
     if pool not in ("dedicated", "shared"):
         raise ValueError(f"unknown pool mode {pool!r}")
     J = len(jobs)
-    plans: dict[tuple, PlanBatch] = {}
+
+    t0 = time.perf_counter()
+    key_param = distinct_window_params(policies, r_total, windows)
+    arrays = job_arrays(jobs)
+    if windows == "even":
+        built = build_plans_batch(jobs, windows="even", arrays=arrays)
+    else:
+        built = build_plans_batch(jobs, list(key_param.values()),
+                                  windows="dealloc", arrays=arrays)
+    plans: dict[tuple, PlanBatch] = dict(zip(key_param, built))
+    plan_seconds = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
     alloc: dict[tuple, np.ndarray] = {}
     group_of: dict[tuple, EvalGroup] = {}
     groups: list[EvalGroup] = []
     for pi, pol in enumerate(policies):
         wkey = _window_key(pol, r_total, windows)
-        if wkey not in plans:
-            plans[wkey] = build_plans(jobs, pol, r_total, windows)
         plan = plans[wkey]
         b0 = None if pol.beta0 is None else round(pol.beta0, 12)
         akey = wkey + (b0,)
@@ -139,11 +203,13 @@ def build_grid_plan(
                       selfowned_work=so_work, selfowned_reserved=so_res)
         group_of[gkey] = g
         groups.append(g)
-    some_plan = next(iter(plans.values()))
+    pool_seconds = time.perf_counter() - t0
+    some_plan = built[0]
     return GridPlan(jobs=jobs, policies=policies, groups=groups,
                     workload=some_plan.workload,
                     arrival=some_plan.arrival, n_jobs=J,
-                    n_policies=len(policies), L=some_plan.z.shape[1])
+                    n_policies=len(policies), L=some_plan.z.shape[1],
+                    plan_seconds=plan_seconds, pool_seconds=pool_seconds)
 
 
 def _group_alloc(plan: PlanBatch, pol: Policy, r_total: int, selfowned: str,
@@ -165,6 +231,9 @@ def _group_alloc(plan: PlanBatch, pol: Policy, r_total: int, selfowned: str,
         return r_alloc
     if availability is None:
         avail = float(r_total)
+    elif isinstance(availability, (list, tuple)):
+        # Per-scenario residual-occupancy queries -> (S, J, L) availability.
+        avail = np.stack([q(plan.starts, plan.ends) for q in availability])
     else:
         avail = availability(plan.starts, plan.ends)
     r_alloc = _selfowned_counts_vec(

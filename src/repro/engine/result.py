@@ -28,10 +28,11 @@ class EngineResult:
     spot_work: np.ndarray          # (S, J, P)
     ondemand_work: np.ndarray      # (S, J, P)
     workload: np.ndarray           # (J,)
-    selfowned_work: np.ndarray     # (J, P) — market-independent
-    selfowned_reserved: np.ndarray  # (J, P)
+    selfowned_work: np.ndarray     # (J, P); (S, J, P) with per-scenario
+    selfowned_reserved: np.ndarray  # availability queries
     backend: str = "numpy"
     single_market: bool = False    # True when the caller passed one market
+    timings: dict | None = None    # plan / pool / eval wall seconds
 
     @property
     def n_scenarios(self) -> int:
@@ -63,12 +64,16 @@ class EngineResult:
 
     def stream_costs(self, p: int, s: int = 0) -> StreamCosts:
         """Per-job StreamCosts of policy p in scenario s."""
+        so_w = self.selfowned_work if self.selfowned_work.ndim == 2 \
+            else self.selfowned_work[s]
+        so_r = self.selfowned_reserved if self.selfowned_reserved.ndim == 2 \
+            else self.selfowned_reserved[s]
         return StreamCosts(
             spot_cost=self.spot_cost[s, :, p].copy(),
             ondemand_cost=self.ondemand_cost[s, :, p].copy(),
             spot_work=self.spot_work[s, :, p].copy(),
             ondemand_work=self.ondemand_work[s, :, p].copy(),
-            selfowned_work=self.selfowned_work[:, p].copy(),
+            selfowned_work=so_w[:, p].copy(),
             workload=self.workload.copy(),
-            selfowned_reserved=self.selfowned_reserved[:, p].copy(),
+            selfowned_reserved=so_r[:, p].copy(),
         )

@@ -190,11 +190,11 @@ def _chain_kernel(A_ref, C_ref, H_ref, arr_ref, ends_ref, z_ref, d_ref,
 
     def gathers_and_counts(idx_list, count_targets):
         """Same chunked comparison-count / one-hot-gather pass as `_kernel`,
-        over the (1, n_pad) scenario slice this grid cell owns."""
+        over the (1, 1, n_pad) (bid, scenario) slice this grid cell owns."""
         def body(c, carry):
             g_acc, c_acc = carry
             base = c * _CHUNK
-            chunks = [r[0, pl.dslice(base * 0 + base, _CHUNK)]
+            chunks = [r[0, 0, pl.dslice(base * 0 + base, _CHUNK)]
                       for r in (A_ref, C_ref, H_ref)]
             g_new = []
             for (idx, ref_i), acc in zip(idx_list, g_acc):
@@ -212,10 +212,10 @@ def _chain_kernel(A_ref, C_ref, H_ref, arr_ref, ends_ref, z_ref, d_ref,
 
     def step(k, carry):
         cur, sc, oc, sw, ow = carry
-        end = ends_ref[pl.dslice(k, 1), :][0]
-        z_raw = z_ref[pl.dslice(k, 1), :][0]
-        d_eff = jnp.maximum(d_ref[pl.dslice(k, 1), :][0], 0.0)
-        pin = pin_ref[pl.dslice(k, 1), :][0] > 0.5
+        end = ends_ref[0, 0, pl.dslice(k, 1), :][0]
+        z_raw = z_ref[0, 0, pl.dslice(k, 1), :][0]
+        d_eff = jnp.maximum(d_ref[0, 0, pl.dslice(k, 1), :][0], 0.0)
+        pin = pin_ref[0, 0, pl.dslice(k, 1), :][0] > 0.5
         # Early-start chain semantics (simulate_chains_early): the task runs
         # in [min(cur, end), end]; tasks whose window already elapsed carry
         # no cloud work.
@@ -277,76 +277,99 @@ def _chain_kernel(A_ref, C_ref, H_ref, arr_ref, ends_ref, z_ref, d_ref,
         return cur, sc, oc, sw, ow
 
     zeros = jnp.zeros((BT,), jnp.float32)
-    carry = (arr_ref[...], zeros, zeros, zeros, zeros)
+    carry = (arr_ref[0, :], zeros, zeros, zeros, zeros)
     _, sc, oc, sw, ow = jax.lax.fori_loop(0, L, step, carry)
-    sc_ref[0, :] = sc
-    oc_ref[0, :] = oc
-    sw_ref[0, :] = sw
-    ow_ref[0, :] = ow
+    sc_ref[0, 0, :] = sc
+    oc_ref[0, 0, :] = oc
+    sw_ref[0, 0, :] = sw
+    ow_ref[0, 0, :] = ow
 
 
 def policy_cost_chain(A_cum, C_cum, arrival, ends, z_t, d_eff, pins, *,
                       slot: float = 1.0 / 12.0, p_od: float = 1.0,
                       block_rows: int = 128, interpret: bool = False):
-    """Batched early-start CHAIN costs for one bid, over S market scenarios.
+    """Batched early-start CHAIN costs over B bids x S market scenarios.
 
-    The grid-evaluation extension of ``policy_cost``: instead of one call per
-    (policy, job-block) with externally-sequenced chain steps, the whole
-    (scenario x policy x job) grid for a bid is ONE kernel launch — rows are
-    flattened (policy, job) cells, the chain recurrence over the L planned
-    windows runs inside the kernel (fori_loop carrying the realized start),
-    and the scenario axis is a grid dimension selecting which cumulative
-    arrays are resident in VMEM.
+    The grid-evaluation extension of ``policy_cost``: the whole
+    (bid x scenario x policy x job) grid of a sweep is ONE kernel launch —
+    rows are flattened (policy, job) cells, the chain recurrence over the L
+    planned windows runs inside the kernel (fori_loop carrying the realized
+    start), and (bid, scenario) are grid dimensions selecting which
+    cumulative arrays are resident in VMEM.
 
-    A_cum/C_cum: (S, n_slots+1) scenario-stacked cumulative arrays (one bid);
-    arrival: (R,); ends/z_t/d_eff: (R, L) padded plans; pins: (R, L) bool
-    (self-owned reservations pin the realized finish to the planned end).
-    Returns dict of (S, R) per-row aggregates.
+    A_cum/C_cum: (B, S, n_slots+1) bid- and scenario-stacked cumulative
+    arrays — or (S, n_slots+1) / (n_slots+1,) for a single bid (the original
+    per-bid entry point, still supported; the result then drops the bid
+    axis). arrival: (B, R); ends: (B, R, L) padded plans; z_t/d_eff/pins:
+    (B, R, L), or (B, S, R, L) when the plans are scenario-specific
+    (per-scenario availability refinement). Rows may be zero-padded
+    (z_t == 0) to equalize row counts across bids. Returns dict of
+    (B, S, R) per-row aggregates ((S, R) in single-bid mode).
     """
     A_cum = jnp.atleast_2d(jnp.asarray(A_cum, jnp.float32))
     C_cum = jnp.atleast_2d(jnp.asarray(C_cum, jnp.float32))
-    S, n1 = A_cum.shape
+    single_bid = A_cum.ndim == 2
+    if single_bid:
+        A_cum, C_cum = A_cum[None], C_cum[None]
+        arrival = jnp.asarray(arrival, jnp.float32)[None]
+        ends = jnp.asarray(ends, jnp.float32)[None]
+        z_t, d_eff, pins = (jnp.asarray(a, jnp.float32)[None]
+                            for a in (z_t, d_eff, pins))
+    B, S, n1 = A_cum.shape
     n_slots = n1 - 1
-    R, L = ends.shape
+    ends = jnp.asarray(ends, jnp.float32)
+    R, L = ends.shape[-2:]
     BT = min(block_rows, max(R, 8))
     pt = (-R) % BT
-    arrival = jnp.pad(jnp.asarray(arrival, jnp.float32), (0, pt))
-    pad2 = lambda a: jnp.pad(jnp.asarray(a, jnp.float32), ((0, pt), (0, 0)))
-    ends_p, z_p, d_p = map(pad2, (ends, z_t, d_eff))
-    pins_p = pad2(jnp.asarray(pins, jnp.float32))
-    # (L, R) layout: the chain loop slices the major dim per step.
-    ends_p, z_p, d_p, pins_p = (a.T for a in (ends_p, z_p, d_p, pins_p))
+    arrival = jnp.pad(jnp.asarray(arrival, jnp.float32), ((0, 0), (0, pt)))
+    # Plans -> (B, S_p, L, R) layout (the chain loop slices L per step);
+    # S_p == S only when the caller passed scenario-specific plans.
+    def to_lsr(a):
+        a = jnp.asarray(a, jnp.float32)
+        if a.ndim == 3:
+            a = a[:, None]
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pt), (0, 0)))
+        return jnp.swapaxes(a, 2, 3)
+    ends_p = to_lsr(ends)
+    z_p, d_p, pins_p = map(to_lsr, (z_t, d_eff, pins))
+    S_p = z_p.shape[1]
 
-    H_cum = jnp.arange(n1, dtype=jnp.float32) * slot - A_cum
+    H_cum = jnp.arange(n1, dtype=jnp.float32)[None, None] * slot - A_cum
     n_pad = ((n1 + _CHUNK - 1) // _CHUNK) * _CHUNK
     padv = n_pad - n1
     big = jnp.float32(3.4e38)
-    pad_s = lambda a: jnp.pad(a, ((0, 0), (0, padv)), constant_values=big)
+    pad_s = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, padv)),
+                              constant_values=big)
     A_p, C_p, H_p = pad_s(A_cum), pad_s(C_cum), pad_s(H_cum)
 
     kernel = functools.partial(
         _chain_kernel, n_slots=n_slots, n_pad=n_pad, L=L, slot=slot,
         p_od=p_od, BT=BT)
     n_blocks = (R + pt) // BT
+    plan_idx = (lambda b, s, i: (b, s, 0, i)) if S_p == S and S > 1 \
+        else (lambda b, s, i: (b, 0, 0, i))
+    plan_spec = pl.BlockSpec((1, 1, L, BT), plan_idx)
     outs = pl.pallas_call(
         kernel,
-        grid=(S, n_blocks),
+        grid=(B, S, n_blocks),
         in_specs=[
-            pl.BlockSpec((1, n_pad), lambda s, i: (s, 0)),
-            pl.BlockSpec((1, n_pad), lambda s, i: (s, 0)),
-            pl.BlockSpec((1, n_pad), lambda s, i: (s, 0)),
-            pl.BlockSpec((BT,), lambda s, i: (i,)),
-            pl.BlockSpec((L, BT), lambda s, i: (0, i)),
-            pl.BlockSpec((L, BT), lambda s, i: (0, i)),
-            pl.BlockSpec((L, BT), lambda s, i: (0, i)),
-            pl.BlockSpec((L, BT), lambda s, i: (0, i)),
+            pl.BlockSpec((1, 1, n_pad), lambda b, s, i: (b, s, 0)),
+            pl.BlockSpec((1, 1, n_pad), lambda b, s, i: (b, s, 0)),
+            pl.BlockSpec((1, 1, n_pad), lambda b, s, i: (b, s, 0)),
+            pl.BlockSpec((1, BT), lambda b, s, i: (b, i)),
+            pl.BlockSpec((1, 1, L, BT), lambda b, s, i: (b, 0, 0, i)),
+            plan_spec,
+            plan_spec,
+            plan_spec,
         ],
-        out_specs=[pl.BlockSpec((1, BT), lambda s, i: (s, i))
+        out_specs=[pl.BlockSpec((1, 1, BT), lambda b, s, i: (b, s, i))
                    for _ in range(4)],
-        out_shape=[jax.ShapeDtypeStruct((S, R + pt), jnp.float32)
+        out_shape=[jax.ShapeDtypeStruct((B, S, R + pt), jnp.float32)
                    for _ in range(4)],
         interpret=interpret,
     )(A_p, C_p, H_p, arrival, ends_p, z_p, d_p, pins_p)
-    sc, oc, sw, ow = [o[:, :R] for o in outs]
+    sc, oc, sw, ow = [o[:, :, :R] for o in outs]
+    if single_bid:
+        sc, oc, sw, ow = sc[0], oc[0], sw[0], ow[0]
     return {"spot_cost": sc, "ondemand_cost": oc, "spot_work": sw,
             "ondemand_work": ow}

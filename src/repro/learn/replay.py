@@ -211,7 +211,14 @@ def replay(
         if workload is None:
             workload = C.workload
         C = C.unit_cost
-    C = np.asarray(C, dtype=np.float64)
+    # Device (jax) tensors stay on device: the compiled scan consumes them
+    # directly without the numpy float64 staging copy; only the numpy
+    # oracle and the result container force a host copy. (The engine still
+    # emits host tensors, so this path serves callers that already hold the
+    # cost tensor on device.)
+    on_device = type(C).__module__.split(".")[0] in ("jax", "jaxlib")
+    if not on_device:
+        C = np.asarray(C, dtype=np.float64)
     if C.ndim == 2:
         C = C[None]
     if C.ndim != 3:
@@ -244,6 +251,9 @@ def replay(
     weights = np.zeros((S, K, m))
 
     if backend == "numpy":
+        if on_device:
+            C = np.asarray(C, dtype=np.float64)
+            on_device = False
         for s in range(S):
             for k, sp in enumerate(specs):
                 out = _replay_numpy_one(C[s], sp, u[s], ev_kind, ev_j,
@@ -281,5 +291,6 @@ def replay(
 
     return LearnResult(
         specs=specs, chosen=chosen, p_chosen=p_sel, expected_unit=e_cost,
-        weights=weights, unit_cost=C, arrivals=arrivals, workload=Z,
+        weights=weights, unit_cost=np.asarray(C, dtype=np.float64),
+        arrivals=arrivals, workload=Z,
         feedback_delay=float(d), backend=backend)

@@ -53,6 +53,26 @@ def test_numpy_vs_scan_parity_every_learner():
     np.testing.assert_allclose(a.regret_curve(), b.regret_curve(), atol=TOL)
 
 
+def test_replay_accepts_device_tensor():
+    """A jax cost tensor feeds the compiled scan directly (no f64 staging
+    copy) and yields the same replay as the equivalent numpy input; the
+    result container still hands back host float64."""
+    jnp = pytest.importorskip("jax.numpy")
+    C, arrivals, d, Z = _tensor()
+    host = replay(C, arrivals, d, workload=Z, learners=["hedge"], seed=3,
+                  backend="jax")
+    dev = replay(jnp.asarray(C), arrivals, d, workload=Z,
+                 learners=["hedge"], seed=3, backend="jax")
+    np.testing.assert_array_equal(host.chosen, dev.chosen)
+    np.testing.assert_allclose(host.weights, dev.weights, atol=TOL)
+    assert isinstance(dev.unit_cost, np.ndarray)
+    assert dev.unit_cost.dtype == np.float64
+    # the numpy oracle transparently pulls a device tensor to host
+    oracle = replay(jnp.asarray(C), arrivals, d, workload=Z,
+                    learners=["hedge"], seed=3, backend="numpy")
+    np.testing.assert_array_equal(oracle.chosen, host.chosen)
+
+
 def test_pallas_kernel_parity_hedge():
     """The fused weight-update kernel (interpret mode on CPU) matches the
     oracle, including across an eta schedule grid."""

@@ -1,0 +1,225 @@
+"""Vectorized plan layer: bit-compatibility of the batched builders with the
+sequential Dealloc/plan loops, the jitted jax twin, the bid-stacked pallas
+chain kernel, and the one-engine-pass-per-round TOLA refinement loop."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Policy,
+    benchmark_bid_policies,
+    generate_chain_jobs,
+    selfowned_policies,
+    spot_od_policies,
+)
+from repro.core.dealloc import (
+    window_sizes,
+    window_sizes_batch,
+    window_sizes_batch_jax,
+)
+from repro.core.scheduler import build_plans, build_plans_batch, job_arrays
+from repro.core.tola import run_tola, run_tola_scenarios
+from repro.engine import make_scenarios
+from repro.engine.plan import distinct_window_params
+
+PLAN_FIELDS = ("starts", "ends", "z", "delta", "mask", "arrival")
+
+
+def _grid_params(policies, r_total):
+    """Distinct Dealloc parameters of a policy grid (engine dedup order)."""
+    return list(distinct_window_params(policies, r_total).values())
+
+
+@pytest.mark.parametrize("job_type", [1, 2, 3, 4])
+def test_batched_plans_bitwise_vs_loop(job_type):
+    """build_plans_batch over the exp1-exp4 policy grids is BIT-identical to
+    looping build_plans per distinct window parameter."""
+    jobs = generate_chain_jobs(40, job_type, seed=10 + job_type)
+    grid = spot_od_policies() + selfowned_policies()
+    for r_total in (0, 300):
+        xs = _grid_params(grid, r_total)
+        batch = build_plans_batch(jobs, xs)
+        assert len(batch) == len(xs)
+        for bp, x in zip(batch, xs):
+            loop = build_plans(jobs, Policy(beta=x, bid=0.27), r_total)
+            for f in PLAN_FIELDS:
+                np.testing.assert_array_equal(
+                    getattr(bp, f), getattr(loop, f), err_msg=f)
+
+
+def test_batched_even_plans_bitwise_vs_loop():
+    """The Even-benchmark window mode (exp1/exp4 bench grids) matches too."""
+    jobs = generate_chain_jobs(35, 2, seed=9)
+    pol = benchmark_bid_policies()[0]
+    (bp,) = build_plans_batch(jobs, windows="even")
+    loop = build_plans(jobs, pol, 0, windows="even")
+    for f in PLAN_FIELDS:
+        np.testing.assert_array_equal(getattr(bp, f), getattr(loop, f),
+                                      err_msg=f)
+
+
+def test_window_sizes_batch_validates():
+    jobs = generate_chain_jobs(5, 1, seed=1)
+    a = job_arrays(jobs)
+    with pytest.raises(ValueError):
+        window_sizes_batch(a.e, a.delta, a.mask, a.omega, [0.0])
+    with pytest.raises(ValueError):
+        window_sizes_batch(a.e, a.delta, a.mask, a.omega, [1.5])
+    with pytest.raises(ValueError):
+        window_sizes_batch(a.e, a.delta, a.mask, a.omega - 1e3, [0.5])
+
+
+def test_window_sizes_jax_twin_parity():
+    """The jitted device twin agrees with the f64 canonical batch pass."""
+    pytest.importorskip("jax")
+    jobs = generate_chain_jobs(30, 3, seed=4)
+    a = job_arrays(jobs)
+    xs = np.array([0.3, 0.625, 1.0])
+    want = window_sizes_batch(a.e, a.delta, a.mask, a.omega, xs)
+    got = np.asarray(window_sizes_batch_jax(a.e, a.delta, a.mask,
+                                            a.omega, xs))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    # and the canonical pass matches the scalar Algorithm 1 loop
+    for g, x in enumerate(xs):
+        for ji, job in enumerate(jobs):
+            np.testing.assert_array_equal(want[g, ji, :job.l],
+                                          window_sizes(job, float(x)))
+
+
+def test_chain_kernel_bid_stacked_parity():
+    """One bid-stacked launch == per-bid chain_costs_ref, incl. row padding
+    and scenario-specific plans."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+
+    from repro.kernels.policy_cost import policy_cost_chain
+    from repro.kernels.ref import chain_costs_ref
+
+    rng = np.random.default_rng(0)
+    S, L = 2, 4
+    rows_per_bid = [10, 7]          # un-equal -> exercises zero-padding
+    bids = [0.18, 0.27]
+    markets = make_scenarios(60.0, S, seed=5)
+    R_max = max(rows_per_bid)
+    B = len(bids)
+    A = np.stack([np.stack([m.view(b).A_cum for m in markets])
+                  for b in bids])
+    C = np.stack([np.stack([m.view(b).C_cum for m in markets])
+                  for b in bids])
+    arrival = np.zeros((B, R_max))
+    ends = np.zeros((B, R_max, L))
+    z_t = np.zeros((B, S, R_max, L))
+    d_eff = np.zeros((B, S, R_max, L))
+    pins = np.zeros((B, S, R_max, L), dtype=bool)
+    for bi, R in enumerate(rows_per_bid):
+        arrival[bi, :R] = rng.uniform(0, 20, R)
+        sizes = rng.uniform(0.2, 6, (R, L))
+        ends[bi, :R] = arrival[bi, :R, None] + np.cumsum(sizes, axis=1)
+        d = rng.choice([1.0, 8.0, 64.0], (S, R, L))
+        z_t[bi, :, :R] = rng.uniform(0, 1, (S, R, L)) * d * sizes
+        d_eff[bi, :, :R] = d
+        pins[bi, :, :R] = rng.random((S, R, L)) < 0.15
+    got = policy_cost_chain(A, C, arrival, ends, z_t, d_eff, pins,
+                            interpret=True)
+    for bi, R in enumerate(rows_per_bid):
+        for s in range(S):
+            ref = chain_costs_ref(
+                jnp.asarray(A[bi, s], jnp.float32),
+                jnp.asarray(C[bi, s], jnp.float32),
+                jnp.asarray(arrival[bi, :R], jnp.float32),
+                jnp.asarray(ends[bi, :R], jnp.float32),
+                jnp.asarray(z_t[bi, s, :R], jnp.float32),
+                jnp.asarray(d_eff[bi, s, :R], jnp.float32),
+                jnp.asarray(pins[bi, s, :R]))
+            for key in ("spot_cost", "ondemand_cost", "spot_work",
+                        "ondemand_work"):
+                np.testing.assert_allclose(
+                    np.asarray(got[key])[bi, s, :R], np.asarray(ref[key]),
+                    atol=3e-3, rtol=3e-3, err_msg=f"{key} bid {bi} s {s}")
+
+
+def test_run_tola_scenarios_one_engine_pass_per_round(monkeypatch):
+    """Refinement issues EXACTLY one evaluate_grid call per round, and the
+    Table-6 outputs stay bit-identical to the sequential per-scenario path."""
+    import repro.engine as engine_mod
+
+    jobs = generate_chain_jobs(30, 2, seed=3)
+    markets = make_scenarios(max(j.deadline for j in jobs) + 1, 2, seed=21)
+    pols = selfowned_policies()[::25]
+    pool_iters = 2
+
+    calls = []
+    real = engine_mod.evaluate_grid
+
+    def counting(*args, **kwargs):
+        calls.append(kwargs.get("availability"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(engine_mod, "evaluate_grid", counting)
+    batch = run_tola_scenarios(jobs, pols, markets, r_total=50, seed=7,
+                               pool_iters=pool_iters, backend="numpy")
+    monkeypatch.undo()
+    # one call per round: the dedicated round 0 plus each refinement
+    assert len(calls) == 1 + pool_iters
+    assert calls[0] is None
+    assert all(isinstance(a, list) and len(a) == len(markets)
+               for a in calls[1:])
+
+    for s, m in enumerate(markets):
+        solo = run_tola(jobs, pols, m, r_total=50, seed=7 + s,
+                        pool_iters=pool_iters, backend="numpy")
+        np.testing.assert_array_equal(batch[s].cost_matrix, solo.cost_matrix)
+        np.testing.assert_array_equal(batch[s].chosen, solo.chosen)
+        np.testing.assert_array_equal(batch[s].weights, solo.weights)
+        np.testing.assert_array_equal(batch[s].fixed_unit_costs,
+                                      solo.fixed_unit_costs)
+        np.testing.assert_array_equal(batch[s].realized.total_cost,
+                                      solo.realized.total_cost)
+        assert batch[s].average_unit_cost() == solo.average_unit_cost()
+
+
+def test_per_scenario_availability_matches_per_scenario_calls():
+    """engine: a list of S availability queries == S single-query passes."""
+    from repro.engine import evaluate_grid
+
+    jobs = generate_chain_jobs(25, 2, seed=6)
+    markets = make_scenarios(max(j.deadline for j in jobs) + 1, 2, seed=11)
+    pols = selfowned_policies()[::30]
+    qs = [lambda s0, e0: np.full_like(s0, 13.0),
+          lambda s0, e0: np.maximum(40.0 - s0, 0.0)]
+    both = evaluate_grid(jobs, pols, markets, 60, availability=qs,
+                         backend="numpy")
+    assert both.selfowned_work.ndim == 3
+    for s, m in enumerate(markets):
+        alone = evaluate_grid(jobs, pols, m, 60, availability=qs[s],
+                              backend="numpy")
+        np.testing.assert_array_equal(both.unit_cost[s], alone.matrix)
+        np.testing.assert_array_equal(both.selfowned_work[s],
+                                      alone.selfowned_work)
+    with pytest.raises(ValueError):
+        evaluate_grid(jobs, pols, markets, 60, availability=qs[:1],
+                      backend="numpy")
+
+
+@pytest.mark.parametrize("backend", ["jax", "pallas"])
+@pytest.mark.parametrize("early_start", [True, False])
+def test_per_scenario_availability_backend_parity(backend, early_start):
+    """jax / pallas(interpret) agree with numpy on per-scenario-refined
+    grids, for both the chain and the planned-start paths."""
+    pytest.importorskip("jax")
+    from repro.engine import evaluate_grid
+
+    jobs = generate_chain_jobs(20, 2, seed=8)
+    markets = make_scenarios(max(j.deadline for j in jobs) + 1, 2, seed=13)
+    pols = selfowned_policies()[::40]
+    qs = [lambda s0, e0: np.full_like(s0, 9.0),
+          lambda s0, e0: np.maximum(30.0 - 0.5 * s0, 0.0)]
+    kw = dict(availability=qs, early_start=early_start)
+    if not early_start:
+        kw.update(windows="even", selfowned="naive")
+    ref = evaluate_grid(jobs, pols, markets, 50, backend="numpy", **kw)
+    got = evaluate_grid(jobs, pols, markets, 50, backend=backend,
+                        interpret=True if backend == "pallas" else None,
+                        **kw)
+    np.testing.assert_allclose(got.unit_cost, ref.unit_cost,
+                               atol=1e-5, rtol=1e-5)

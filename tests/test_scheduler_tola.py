@@ -159,7 +159,7 @@ def _allocate_pool_reference(plan, r_total, selfowned, spu):
 ])
 def test_allocate_pool_batched_equals_sequential(n, jt, r, so):
     """The chunked-optimistic allocation (batched occupancy writes +
-    range-max skip filter) is EXACTLY the sequential chronological scan."""
+    segment-tree contended passes) is EXACTLY the sequential scan."""
     from repro.core.scheduler import _allocate_pool, build_plans
 
     jobs, _ = _setup(n, jt=jt, seed=n + r)
@@ -173,3 +173,5 @@ def test_allocate_pool_batched_equals_sequential(n, jt, r, so):
                - want_p.reserved_instance_time) < 1e-6
     assert abs(got_p.worked_instance_time
                - want_p.worked_instance_time) < 1e-6
+
+
