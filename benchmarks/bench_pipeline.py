@@ -7,7 +7,10 @@ and breaks the wall time into those three phases (``EngineResult.timings``),
 so the plan layer's cost is a tracked number instead of hidden warmup.
 It also races the batched plan builder (``build_plans_batch``, one
 vectorized (G, J, L) pass over the deduplicated window-parameter grid)
-against the legacy per-group ``build_plans`` loop it replaced. Emits
+against the legacy per-group ``build_plans`` loop it replaced, and — for
+every non-numpy backend — the HOST plan path (f64 numpy oracle) against
+the DEVICE plan path (``plan_backend="device"``: the whole jobs->plan
+tensor pass as one jit program, ``<backend>+device-plan`` entries). Emits
 ``BENCH_pipeline.json``:
 
     PYTHONPATH=src python -m benchmarks.bench_pipeline \
@@ -86,16 +89,24 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
     print(f"[plan  ] loop {t_loop:7.3f}s  batch {t_batch:7.3f}s  "
           f"({out['plan_batch_speedup']:.1f}x, {len(xs)} window groups)")
 
-    # --- end-to-end jobs -> cost tensor, per backend ---------------------
+    # --- end-to-end jobs -> cost tensor, per (backend, plan-backend) -----
+    # Host-plan legs keep the bare backend key (the CI regression gate
+    # compares them across runs); the device-plan leg of each non-numpy
+    # backend races the SAME end-to-end pass with the plan tensors built
+    # on device ("<backend>+device-plan").
+    legs = [(b, "host") for b in backends]
+    legs += [(b, "device") for b in backends if b != "numpy"]
     ref = None
-    for backend in backends:
+    for backend, plan_backend in legs:
+        name = backend if plan_backend == "host" \
+            else f"{backend}+device-plan"
         res = None
         best = np.inf
         phases = None
         for it in range(iters + 1):
             t0 = time.perf_counter()
             res = evaluate_grid(jobs, grid, markets, r_total,
-                                backend=backend)
+                                backend=backend, plan_backend=plan_backend)
             dt = time.perf_counter() - t0
             if it == 0:
                 warmup = dt      # absorbs jit / pallas compilation
@@ -108,6 +119,7 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
             "plan_seconds": phases["plan"],
             "pool_seconds": phases["pool"],
             "eval_seconds": phases["eval"],
+            "plan_device_seconds": phases["plan_device"],
             "interpret": backend == "pallas"
             and out["jax_backend"] == "cpu",
         }
@@ -115,7 +127,7 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
             entry["note"] = ("pallas kernels ran in INTERPRET mode on CPU — "
                              "kernel-logic timing, NOT TPU speed; do not "
                              "compare against the numpy/jax entries")
-        out["backends"][backend] = entry
+        out["backends"][name] = entry
         if ref is None:
             ref = res.unit_cost
             entry["max_abs_diff_vs_first"] = 0.0
@@ -124,7 +136,7 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
                 np.abs(res.unit_cost - ref).max())
         tag = "  (interpret — kernel logic, NOT TPU speed)" \
             if entry["interpret"] else ""
-        print(f"[{backend:6s}] {best:7.3f}s end-to-end  "
+        print(f"[{name:16s}] {best:7.3f}s end-to-end  "
               f"(plan {phases['plan']:.3f}  pool {phases['pool']:.3f}  "
               f"eval {phases['eval']:.3f})  "
               f"{cells / best / 1e3:9.1f}k cells/s{tag}")

@@ -29,6 +29,7 @@ __all__ = [
     "window_sizes_batch",
     "window_sizes_batch_jax",
     "expected_spot_work",
+    "expected_spot_work_jax",
     "allocation_windows",
 ]
 
@@ -122,7 +123,13 @@ def window_sizes_batch(
 
 
 @functools.lru_cache(maxsize=1)
-def _window_sizes_batch_jit():
+def _jax_impls():
+    """Traceable jnp twins of the plan-layer pieces living in this module.
+
+    Exposed un-jitted so the engine's device plan builder can fuse them into
+    ONE jit program (plan.py); the public ``*_jax`` wrappers jit them
+    standalone for direct use and parity testing.
+    """
     import jax
     import jax.numpy as jnp
 
@@ -146,7 +153,20 @@ def _window_sizes_batch_jit():
         return jnp.take_along_axis(
             sizes_s, jnp.broadcast_to(inv[None], (G, J, L)), axis=2)
 
-    return jax.jit(batch)
+    def spot_work(z, delta, sizes, x):
+        e = z / delta
+        # x >= 1: any feasible window finishes on spot alone (Prop 4.5).
+        # The x < 1 branch guards the 1/(1-x) pole so it stays finite (and
+        # irrelevant) when the predicate selects the saturated branch.
+        frac = x / jnp.maximum(1.0 - x, 1e-30)
+        capped = jnp.minimum(z, frac * delta * jnp.maximum(sizes - e, 0.0))
+        return jnp.where(x >= 1.0 - 1e-12,
+                         jnp.where(sizes >= e - 1e-12, z, 0.0), capped)
+
+    return {"window_sizes_batch": batch,
+            "window_sizes_batch_jit": jax.jit(batch),
+            "expected_spot_work": spot_work,
+            "expected_spot_work_jit": jax.jit(spot_work)}
 
 
 def window_sizes_batch_jax(e, delta, mask, omega, xs):
@@ -159,9 +179,24 @@ def window_sizes_batch_jax(e, delta, mask, omega, xs):
     """
     import jax.numpy as jnp
 
-    return _window_sizes_batch_jit()(
+    return _jax_impls()["window_sizes_batch_jit"](
         jnp.asarray(e), jnp.asarray(delta), jnp.asarray(mask),
         jnp.asarray(omega), jnp.asarray(xs))
+
+
+def expected_spot_work_jax(z, delta, sizes, x):
+    """Jitted device twin of :func:`expected_spot_work` (Prop 4.2/4.5).
+
+    Unlike the host version, ``x`` may be an array and broadcasts (the
+    device plan path evaluates whole parameter grids at once). Device dtype
+    (usually f32): parity with the f64 canonical path is float-level, not
+    bitwise.
+    """
+    import jax.numpy as jnp
+
+    return _jax_impls()["expected_spot_work_jit"](
+        jnp.asarray(z), jnp.asarray(delta), jnp.asarray(sizes),
+        jnp.asarray(x))
 
 
 def expected_spot_work(

@@ -29,6 +29,7 @@ policies offline.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -47,6 +48,7 @@ __all__ = [
     "job_arrays",
     "build_plans",
     "build_plans_batch",
+    "selfowned_counts_vec_jax",
     "run_jobs",
     "evaluate_policy_fullpool",
 ]
@@ -286,6 +288,77 @@ def _selfowned_counts_vec(
     if mode == "naive":
         return np.maximum(0.0, np.minimum(avail, delta))
     raise ValueError(f"unknown self-owned mode {mode!r}")
+
+
+# Integral-count rounding guard of the DEVICE twin: the host path ceils
+# with a 1e-9 absolute epsilon (f64 noise floor); device arithmetic is f32,
+# whose ~1e-7 relative noise would push exact-integer f values (e.g. the
+# zero-slack case f(beta_0) = delta) across the ceil boundary. 1e-5 absorbs
+# that; the remaining knife edge (an f64 value within (1e-9, 1e-5) above an
+# integer) is measure-zero on the paper's continuous workload draws, and
+# the min(..., delta) clamp already pins the common exact-integer cases.
+_DEVICE_CEIL_EPS = 1e-5
+
+
+@functools.lru_cache(maxsize=None)
+def _selfowned_counts_impl(mode: str):
+    """Traceable jnp twin of :func:`_selfowned_counts_vec` (policy (12)).
+
+    Broadcast-generic exactly like the host version: any of the arguments
+    may carry extra leading axes (parameter-grid / scenario axes of the
+    device plan builder) and the result takes the combined shape. NaN
+    ``beta0`` means "no self-owned instances" (count 0), mirroring the host
+    NaN contract.
+    """
+    import jax.numpy as jnp
+
+    if mode == "prop12":
+        def counts(z, delta, sizes, beta0, avail):
+            s = jnp.maximum(sizes, 1e-12)
+            safe_b0 = jnp.where(jnp.isnan(beta0), 1.0, beta0)
+            one = safe_b0 >= 1.0 - 1e-12
+            den = s * jnp.where(one, 1.0, 1.0 - safe_b0)
+            # Eq.-(11) numerator z - delta*size*beta_0 is EXACTLY zero for
+            # every task the Dealloc waterfill fills to its cap (there
+            # size = e/beta_0, so delta*size*beta_0 = z by construction) —
+            # a systematic knife edge, not a measure-zero one. Snap the
+            # f32 blur around it to the f = 0 the f64 oracle computes.
+            num = z - delta * s * safe_b0
+            f = jnp.where(one | (num <= _DEVICE_CEIL_EPS * (z + 1.0)), 0.0,
+                          num / jnp.maximum(den, 1e-30))
+            f = jnp.ceil(f - _DEVICE_CEIL_EPS)
+            f = jnp.where(jnp.isnan(beta0), 0.0, f)
+            useful = jnp.ceil(jnp.where(sizes > 0, z / s, 0.0)
+                              - _DEVICE_CEIL_EPS)
+            return jnp.maximum(0.0, jnp.minimum(jnp.minimum(f, avail),
+                                                jnp.minimum(delta, useful)))
+        return counts
+    if mode == "naive":
+        def counts(z, delta, sizes, beta0, avail):
+            return jnp.maximum(0.0, jnp.minimum(avail, delta))
+        return counts
+    raise ValueError(f"unknown self-owned mode {mode!r}")
+
+
+@functools.lru_cache(maxsize=None)
+def _selfowned_counts_jit(mode: str):
+    import jax
+
+    return jax.jit(_selfowned_counts_impl(mode))
+
+
+def selfowned_counts_vec_jax(z, delta, sizes, beta0, available,
+                             mode: str = "prop12"):
+    """Jitted device twin of :func:`_selfowned_counts_vec`.
+
+    Device dtype (usually f32) with a widened ceil epsilon
+    (``_DEVICE_CEIL_EPS``); the f64 host path stays the exact oracle.
+    """
+    import jax.numpy as jnp
+
+    return _selfowned_counts_jit(mode)(
+        jnp.asarray(z), jnp.asarray(delta), jnp.asarray(sizes),
+        jnp.asarray(beta0), jnp.asarray(available))
 
 
 _POOL_CHUNK = 256  # tasks per optimistic batch of the chronological alloc

@@ -12,7 +12,12 @@ Layers: plan (``plan.py`` — deduplicated PlanBatch groups), backends
 regime-shifted / replay market families).
 """
 
-from repro.engine.api import available_backends, evaluate_grid, resolve_backend
+from repro.engine.api import (
+    available_backends,
+    evaluate_grid,
+    resolve_backend,
+    resolve_plan_backend,
+)
 from repro.engine.plan import EvalGroup, GridPlan, build_grid_plan
 from repro.engine.result import EngineResult
 from repro.engine.scenarios import (
@@ -25,6 +30,7 @@ from repro.engine.scenarios import (
 
 __all__ = [
     "evaluate_grid", "available_backends", "resolve_backend",
+    "resolve_plan_backend",
     "EngineResult", "EvalGroup", "GridPlan", "build_grid_plan",
     "make_scenarios", "adversarial_scenarios", "replay_scenarios",
     "check_scenarios", "stack_views",

@@ -12,6 +12,12 @@ across policies x bids x market scenarios and dispatches to a backend:
 All backends consume the same deduplicated ``GridPlan`` (see ``plan.py``)
 and fill the same (S, J, P) result tensors, so parity is testable cell by
 cell (tests/test_engine.py).
+
+The PLAN layer is backend-parametric too (``plan_backend``): ``"host"`` is
+the float64 numpy oracle, ``"device"`` builds the plan tensors as one
+fused jit program whose outputs the jax/pallas cost kernels consume
+without a host staging copy. ``"auto"`` pairs the device plan with the
+jax/pallas eval backends and the host plan with numpy.
 """
 
 from __future__ import annotations
@@ -29,17 +35,30 @@ from repro.engine.plan import build_grid_plan
 from repro.engine.result import EngineResult
 from repro.engine.scenarios import check_scenarios
 
-__all__ = ["evaluate_grid", "available_backends", "resolve_backend"]
+__all__ = ["evaluate_grid", "available_backends", "resolve_backend",
+           "resolve_plan_backend"]
 
 _BACKENDS = ("numpy", "jax", "pallas")
+_PLAN_BACKENDS = ("host", "device")
 
 
 def available_backends() -> list[str]:
-    """Backends usable in this process (jax/pallas need importable jax)."""
+    """Backends usable in this process.
+
+    ``"jax"`` needs an importable jax; ``"pallas"`` additionally needs
+    ``jax.experimental.pallas`` — probed for real (some jax builds ship
+    without it), so ``--backend pallas`` fails at selection time with a
+    clear message instead of mid-run.
+    """
     out = ["numpy"]
     try:
         import jax  # noqa: F401
-        out += ["jax", "pallas"]
+    except Exception:
+        return out
+    out.append("jax")
+    try:
+        import jax.experimental.pallas  # noqa: F401
+        out.append("pallas")
     except Exception:
         pass
     return out
@@ -48,17 +67,68 @@ def available_backends() -> list[str]:
 def resolve_backend(backend: str) -> str:
     """Resolve "auto" (env override REPRO_ENGINE_BACKEND honored first)."""
     if backend == "auto":
-        backend = os.environ.get("REPRO_ENGINE_BACKEND", "auto")
+        env = os.environ.get("REPRO_ENGINE_BACKEND", "auto")
+        if env not in _BACKENDS + ("auto",):
+            # Validated separately from the caller's argument: the generic
+            # "unknown backend" error below would blame the caller's
+            # "auto" for a bad environment value.
+            raise ValueError(
+                f"invalid REPRO_ENGINE_BACKEND={env!r} environment "
+                f"override; pick from {_BACKENDS + ('auto',)}")
+        backend = env
     if backend == "auto":
+        avail = available_backends()
         try:
             import jax
-            return "pallas" if jax.default_backend() != "cpu" else "numpy"
+            on_accel = jax.default_backend() != "cpu"
         except Exception:
             return "numpy"
+        if on_accel:
+            return "pallas" if "pallas" in avail else "jax"
+        return "numpy"
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; pick from "
                          f"{_BACKENDS + ('auto',)}")
+    avail = available_backends()
+    if backend not in avail:
+        why = ("jax imports but jax.experimental.pallas does not"
+               if backend == "pallas" and "jax" in avail
+               else "jax is not importable in this environment")
+        raise ValueError(f"backend {backend!r} is unavailable ({why}); "
+                         f"available backends: {avail}")
     return backend
+
+
+def resolve_plan_backend(plan_backend: str, backend: str,
+                         pool: str = "dedicated") -> str:
+    """Resolve the plan-layer backend.
+
+    ``"auto"`` follows the (already resolved) eval backend: device plan
+    tensors for jax/pallas, host float64 for numpy. The shared-pool replay
+    and environments without jax stay on host. Explicit ``"device"`` with
+    an incompatible combination raises instead of silently degrading.
+    """
+    if plan_backend == "auto":
+        if backend in ("jax", "pallas") and pool != "shared" \
+                and "jax" in available_backends():
+            return "device"
+        return "host"
+    if plan_backend not in _PLAN_BACKENDS:
+        raise ValueError(f"unknown plan backend {plan_backend!r}; pick from "
+                         f"{_PLAN_BACKENDS + ('auto',)}")
+    if plan_backend == "device":
+        if backend == "numpy":
+            raise ValueError(
+                "plan_backend='device' feeds device tensors to the "
+                "jax/pallas eval backends; the numpy oracle is host-only "
+                "(use plan_backend='host')")
+        if pool == "shared":
+            raise ValueError(
+                "plan_backend='device' supports pool='dedicated' only (the "
+                "chronological shared-pool replay is host code)")
+        if "jax" not in available_backends():
+            raise ValueError("plan_backend='device' requires importable jax")
+    return plan_backend
 
 
 def evaluate_grid(
@@ -73,6 +143,7 @@ def evaluate_grid(
     pool: str = "dedicated",
     availability: Callable | Sequence[Callable] | None = None,
     backend: str = "auto",
+    plan_backend: str = "auto",
     interpret: bool | None = None,
 ) -> EngineResult:
     """Evaluate every job under every policy in every market scenario.
@@ -89,7 +160,10 @@ def evaluate_grid(
     per-scenario callables for scenario-batched pool refinement, in which
     case the self-owned stats gain a leading scenario axis), "shared"
     replays the chronological shared-pool allocation per policy
-    (fixed-policy sweep semantics of ``run_jobs``). ``interpret``
+    (fixed-policy sweep semantics of ``run_jobs``). ``plan_backend``
+    selects where the plan tensors are built (see
+    :func:`resolve_plan_backend`); ``timings["plan_device"]`` reports the
+    device-build seconds (0.0 on the host plan path). ``interpret``
     forces/forbids pallas interpret mode (default: interpret off-TPU).
     """
     if not jobs:
@@ -102,17 +176,14 @@ def evaluate_grid(
     if not market_list:
         raise ValueError("need at least one market scenario")
     check_scenarios(market_list)
-    if isinstance(availability, (list, tuple)) \
-            and len(availability) != len(market_list):
-        raise ValueError(
-            f"per-scenario availability needs one query per scenario "
-            f"({len(availability)} queries, {len(market_list)} scenarios)")
 
     backend = resolve_backend(backend)
+    plan_backend = resolve_plan_backend(plan_backend, backend, pool)
     gplan = build_grid_plan(
         jobs, policies, r_total, windows=windows, selfowned=selfowned,
         pool=pool, availability=availability,
-        slots_per_unit=market_list[0].slots_per_unit)
+        slots_per_unit=market_list[0].slots_per_unit,
+        n_scenarios=len(market_list), plan_backend=plan_backend)
 
     S, J, P = len(market_list), gplan.n_jobs, gplan.n_policies
     out = {k: np.zeros((S, J, P)) for k in
@@ -135,7 +206,8 @@ def evaluate_grid(
     selfowned_work = np.zeros(so_shape)
     selfowned_reserved = np.zeros(so_shape)
     for g in gplan.groups:
-        sw, sr = g.selfowned_work, g.selfowned_reserved
+        sw = np.asarray(g.selfowned_work)
+        sr = np.asarray(g.selfowned_reserved)
         if per_scenario and not g.per_scenario:
             sw, sr = np.broadcast_to(sw, (S, J)), np.broadcast_to(sr, (S, J))
         selfowned_work[..., g.policy_idx] = sw[..., None]
@@ -154,6 +226,12 @@ def evaluate_grid(
         selfowned_reserved=selfowned_reserved,
         backend=backend,
         single_market=single,
+        # plan_device: the jit plan-build seconds alone — on the staged
+        # device path the pool phase is dominated by HOST work (the
+        # availability-query callables), which must not masquerade as
+        # device-build time.
         timings={"plan": gplan.plan_seconds, "pool": gplan.pool_seconds,
-                 "eval": eval_seconds},
+                 "eval": eval_seconds,
+                 "plan_device": (gplan.plan_seconds
+                                 if gplan.device else 0.0)},
     )

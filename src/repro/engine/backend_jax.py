@@ -13,6 +13,11 @@ are (S, R, L) stacks and the ``_ps`` entry points vmap them alongside the
 market arrays; the common scenario-shared case keeps them closed over
 (one host->device copy, no S-fold broadcast).
 
+Device grid plans (``plan_backend="device"``) arrive as jax arrays and are
+consumed directly — ``concat_rows``/``scenario_cat`` stack them with jnp,
+so the plan tensors never take a host round trip between the plan jit and
+the cost jit.
+
 The jitted entry points live at module scope and take every plan array as
 a traced argument, so repeated ``evaluate_grid`` calls reuse the compile
 cache (one compilation per distinct batch shape, not per call).
@@ -24,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine.plan import scenario_cat
+from repro.engine.plan import concat_rows, scenario_cat
 from repro.engine.scenarios import stack_views
 from repro.kernels.ref import chain_costs_ref, policy_cost_ref
 
@@ -83,13 +88,13 @@ def run(gplan, markets, early_start: bool, out) -> None:
         groups = gplan.groups_for_bid(bid)
         A, C = stack_views(markets, bid)        # (S, n_slots+1)
         A, C = f32(A), f32(C)
-        ends = np.concatenate([g.plan.ends for g in groups])
+        ends = concat_rows([g.plan.ends for g in groups])
         if ps:
             z_t = scenario_cat(groups, "z_t", S)
             d_eff = scenario_cat(groups, "d_eff", S)
         else:
-            z_t = np.concatenate([g.z_t for g in groups])
-            d_eff = np.concatenate([g.d_eff for g in groups])
+            z_t = concat_rows([g.z_t for g in groups])
+            d_eff = concat_rows([g.d_eff for g in groups])
         if early_start:
             arrival = np.tile(gplan.arrival, len(groups))
             if ps:
@@ -98,11 +103,11 @@ def run(gplan, markets, early_start: bool, out) -> None:
                                       f32(z_t), f32(d_eff),
                                       jnp.asarray(pins), p_od, slot)
             else:
-                pins = np.concatenate([g.pins for g in groups])
+                pins = concat_rows([g.pins for g in groups])
                 res = _chain_batch(A, C, f32(arrival), f32(ends), f32(z_t),
                                    f32(d_eff), jnp.asarray(pins), p_od, slot)
         else:
-            starts = np.concatenate([g.plan.starts for g in groups])
+            starts = concat_rows([g.plan.starts for g in groups])
             R, L = ends.shape
             if ps:
                 res = _task_batch_ps(

@@ -18,6 +18,10 @@ __all__ = ["run"]
 
 def run(gplan, markets, early_start: bool, out) -> None:
     """Fill the (S, J, P) arrays in ``out`` for every scenario and group."""
+    if getattr(gplan, "device", False):
+        raise ValueError(
+            "the numpy oracle backend requires a host (float64) grid plan; "
+            "build it with plan_backend='host'")
     for s, market in enumerate(markets):
         for g in gplan.groups:
             view = market.view(float(g.bid))

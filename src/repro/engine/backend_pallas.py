@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.engine.plan import scenario_cat
+from repro.engine.plan import concat_rows, scenario_cat
 from repro.engine.scenarios import stack_views
 
 __all__ = ["run"]
@@ -49,26 +49,56 @@ def run(gplan, markets, early_start: bool, out, interpret: bool | None = None,
         A = np.zeros((B, S, markets[0].n_slots + 1), np.float32)
         C = np.zeros_like(A)
         arrival = np.zeros((B, R_max))
-        ends = np.zeros((B, R_max, L))
-        pshape = (B, S, R_max, L) if per_scenario else (B, R_max, L)
-        z_t = np.zeros(pshape)
-        d_eff = np.zeros(pshape)
-        pins = np.zeros(pshape, dtype=bool)
         for bi, (bid, groups) in enumerate(zip(bids, groups_per_bid)):
             A[bi], C[bi] = stack_views(markets, bid)
-            R = len(groups) * J
-            arrival[bi, :R] = np.tile(gplan.arrival, len(groups))
-            ends[bi, :R] = np.concatenate([g.plan.ends for g in groups])
-            if per_scenario:
-                sl = (bi, slice(None), slice(0, R))
-                cat = lambda attr: scenario_cat(groups, attr, S)
-            else:
-                sl = (bi, slice(0, R))
-                cat = lambda attr: np.concatenate(
-                    [getattr(g, attr) for g in groups])
-            z_t[sl] = cat("z_t")
-            d_eff[sl] = cat("d_eff")
-            pins[sl] = cat("pins")
+            arrival[bi, :len(groups) * J] = np.tile(gplan.arrival,
+                                                    len(groups))
+        if gplan.device:
+            # Device grid plan: build the zero-padded (B, ..., R_max, L)
+            # stacks with jnp so the plan tensors feed the kernel without a
+            # host round trip.
+            def pad(a, raxis):
+                if a.shape[raxis] == R_max:
+                    return a
+                w = [(0, 0)] * a.ndim
+                w[raxis] = (0, R_max - a.shape[raxis])
+                return jnp.pad(a, w)
+
+            raxis = 1 if per_scenario else 0  # row axis of the s-o stacks
+
+            def cat(groups, attr):
+                if per_scenario:
+                    return scenario_cat(groups, attr, S)
+                return concat_rows([getattr(g, attr) for g in groups])
+
+            ends = jnp.stack(
+                [pad(concat_rows([g.plan.ends for g in gs]), 0)
+                 for gs in groups_per_bid])
+            z_t = jnp.stack([pad(cat(gs, "z_t"), raxis)
+                             for gs in groups_per_bid])
+            d_eff = jnp.stack([pad(cat(gs, "d_eff"), raxis)
+                               for gs in groups_per_bid])
+            pins = jnp.stack([pad(cat(gs, "pins"), raxis)
+                              for gs in groups_per_bid])
+        else:
+            ends = np.zeros((B, R_max, L))
+            pshape = (B, S, R_max, L) if per_scenario else (B, R_max, L)
+            z_t = np.zeros(pshape)
+            d_eff = np.zeros(pshape)
+            pins = np.zeros(pshape, dtype=bool)
+            for bi, groups in enumerate(groups_per_bid):
+                R = len(groups) * J
+                ends[bi, :R] = np.concatenate([g.plan.ends for g in groups])
+                if per_scenario:
+                    sl = (bi, slice(None), slice(0, R))
+                    cat = lambda attr: scenario_cat(groups, attr, S)
+                else:
+                    sl = (bi, slice(0, R))
+                    cat = lambda attr: np.concatenate(
+                        [getattr(g, attr) for g in groups])
+                z_t[sl] = cat("z_t")
+                d_eff[sl] = cat("d_eff")
+                pins[sl] = cat("pins")
         res = policy_cost_chain(
             A, C, arrival, ends, z_t, d_eff, pins, slot=slot, p_od=p_od,
             block_rows=block_rows, interpret=interpret)
@@ -84,15 +114,15 @@ def run(gplan, markets, early_start: bool, out, interpret: bool | None = None,
 
     for bid, groups in zip(bids, groups_per_bid):
         A, C = stack_views(markets, bid)        # (S, n_slots+1)
-        starts = np.concatenate([g.plan.starts for g in groups])
-        ends = np.concatenate([g.plan.ends for g in groups])
+        starts = concat_rows([g.plan.starts for g in groups])
+        ends = concat_rows([g.plan.ends for g in groups])
         R, L = ends.shape
         if gplan.per_scenario:
             z_all = scenario_cat(groups, "z_t", S)       # (S, R, L)
             d_all = scenario_cat(groups, "d_eff", S)
         else:
-            z_one = np.concatenate([g.z_t for g in groups])
-            d_one = np.concatenate([g.d_eff for g in groups])
+            z_one = concat_rows([g.z_t for g in groups])
+            d_one = concat_rows([g.d_eff for g in groups])
         per_s = []
         for s in range(S):
             z_t = z_all[s] if gplan.per_scenario else z_one

@@ -10,25 +10,37 @@ and collapse into one group — the paper's C1 x C2 x B grid of 175 policies
 reduces to 35 distinct evaluations because every beta >= beta_0 drives
 Dealloc with beta_0 (Alg. 2 lines 1-5).
 
-The plan layer is itself part of the array program: the window plans for
-ALL distinct Dealloc parameters come out of ONE vectorized
-``build_plans_batch`` pass over the padded (G, J, L) tensor
-(``core.dealloc.window_sizes_batch``, bit-identical to the legacy per-job
-loop), so plan construction scales with the deduplicated grid, not with
-n_policies x n_jobs Python iterations.
+The plan layer is itself part of the array program, and it is
+**backend-parametric** (``plan_backend``):
 
-Every backend (numpy / jax / pallas) consumes the same ``GridPlan``; all
-market-independent arithmetic (self-owned counts, cloud residual workloads,
-pins) happens here exactly once, in float64 numpy, so backends only differ
-in how they realize the spot market. When ``availability`` is a *list* of
-per-scenario queries (TOLA's batched pool refinement), the self-owned
-arrays gain a leading scenario axis — groups carry (S, J, L) tensors and
-backends pair scenario s with slice s.
+* ``"host"`` — float64 numpy, the bit-exact oracle: window plans for ALL
+  distinct Dealloc parameters come out of ONE vectorized
+  ``build_plans_batch`` pass (``core.dealloc.window_sizes_batch``,
+  bit-identical to the legacy per-job loop), and the market-independent
+  arithmetic (policy-(12) counts, cloud residuals, pins) follows in f64.
+* ``"device"`` — the same pipeline as ONE fused jit program (device dtype,
+  usually f32): the Alg.-1 waterfill (``core.dealloc`` jnp twin), the
+  policy-(12) counts (``core.scheduler._selfowned_counts_impl``), the
+  cloud residuals, and the group gather all trace into a single XLA
+  computation whose outputs stay on device — the jax/pallas cost kernels
+  consume them without a host staging copy. Parity with the host path is
+  float-level (<=1e-5 relative on unit costs; tests/test_plan_batch.py),
+  NOT bitwise, and integral-count ceils use a widened epsilon
+  (``scheduler._DEVICE_CEIL_EPS``) to absorb f32 noise.
+
+Every backend (numpy / jax / pallas) consumes the same ``GridPlan``
+structure; the numpy oracle requires a host plan. When ``availability`` is
+a *list* of per-scenario queries (TOLA's batched pool refinement), the
+self-owned arrays gain a leading scenario axis — groups carry (S, J, L)
+tensors and backends pair scenario s with slice s. Availability queries
+are host callables, so the device path stages the planned windows to host
+once to evaluate them (the default query-free path never leaves device).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 
 import numpy as np
@@ -44,17 +56,52 @@ from repro.core.scheduler import (
 from repro.core.types import ChainJob
 
 __all__ = ["EvalGroup", "GridPlan", "build_grid_plan", "scenario_cat",
-           "distinct_window_params"]
+           "concat_rows", "distinct_window_params"]
+
+_PLAN_BACKENDS = ("host", "device")
+
+# Dust threshold of the DEVICE residual-workload kill. The host oracle
+# zeroes residuals below 1e-9 * (z + 1) — the f64 cancellation floor of
+# z - r * sizes. Device arithmetic is f32 whose cancellation noise is
+# ~1e-7 relative, so the same subtraction leaves phantom residuals the
+# 1e-9 threshold would keep alive; 1e-6 kills them. Genuine residuals are
+# either 0 or substantial, so the widened window changes nothing real.
+_DEVICE_DUST = 1e-6
 
 
-def scenario_cat(groups, attr: str, S: int) -> np.ndarray:
+def _xp_of(a):
+    """numpy for host arrays, jax.numpy for device-resident arrays."""
+    if isinstance(a, np.ndarray):
+        return np
+    import jax.numpy as jnp
+
+    return jnp
+
+
+def concat_rows(arrays):
+    """Concatenate group row batches along axis 0 without forcing device
+    tensors through host (np.concatenate on jax arrays would)."""
+    return _xp_of(arrays[0]).concatenate(arrays)
+
+
+def scenario_cat(groups, attr: str, S: int):
     """Concatenate a group attribute into an (S, R, L) scenario-major stack,
     broadcasting groups whose arrays are scenario-independent — the one
     place the per-scenario/shared mixing rule lives (both the jax and the
-    pallas backend consume it)."""
-    return np.concatenate(
-        [np.broadcast_to(getattr(g, attr),
-                         (S,) + g.plan.ends.shape) for g in groups], axis=1)
+    pallas backend consume it). Device tensors stay on device."""
+    xp = _xp_of(getattr(groups[0], attr))
+    return xp.concatenate(
+        [xp.broadcast_to(getattr(g, attr),
+                         (S,) + tuple(g.plan.ends.shape)) for g in groups],
+        axis=1)
+
+
+def _bid_key(bid: float) -> float:
+    """The one bid-comparison rule of the plan layer: groups are deduped,
+    listed and looked up on the SAME rounded value (raw-float comparison
+    would let two bids differing below 1e-12 collapse into one group and
+    then miss it on lookup)."""
+    return round(bid, 12)
 
 
 @dataclasses.dataclass
@@ -64,7 +111,8 @@ class EvalGroup:
     ``policy_idx`` lists every policy of the original grid that this group
     realizes. The self-owned arrays are (J, L) when market-independent and
     (S, J, L) when the caller supplied per-scenario availability queries
-    (``per_scenario`` distinguishes the two).
+    (``per_scenario`` distinguishes the two). On the device plan path they
+    are jax device arrays (f32) instead of host numpy (f64).
     """
 
     plan: PlanBatch
@@ -96,17 +144,26 @@ class GridPlan:
     L: int
     plan_seconds: float = 0.0   # window-plan tensor construction
     pool_seconds: float = 0.0   # self-owned allocation + residuals
+    plan_backend: str = "host"  # "host" (numpy f64) | "device" (jit)
+
+    @property
+    def device(self) -> bool:
+        return self.plan_backend == "device"
 
     @property
     def bids(self) -> list[float]:
-        return sorted({g.bid for g in self.groups})
+        seen: dict[float, float] = {}
+        for g in self.groups:
+            seen.setdefault(_bid_key(g.bid), g.bid)
+        return sorted(seen.values())
 
     @property
     def per_scenario(self) -> bool:
         return any(g.per_scenario for g in self.groups)
 
     def groups_for_bid(self, bid: float) -> list[EvalGroup]:
-        return [g for g in self.groups if g.bid == bid]
+        key = _bid_key(bid)
+        return [g for g in self.groups if _bid_key(g.bid) == key]
 
 
 def _window_key(policy: Policy, r_total: int, windows: str):
@@ -131,6 +188,47 @@ def distinct_window_params(policies, r_total: int,
     return key_param
 
 
+@dataclasses.dataclass
+class _GridStructure:
+    """First-appearance-ordered dedup of the (window, beta_0, bid) grid —
+    the host-side index arithmetic both plan backends share, so grouping
+    is identical by construction."""
+
+    key_param: dict[tuple, float]   # window key -> exact Dealloc param
+    a_plan: list[int]               # akey -> window-plan index
+    a_beta0: list[float | None]     # akey -> beta_0 of its first policy
+    g_akey: list[int]               # group -> akey index
+    g_bid: list[float]              # group -> exact bid of its first policy
+    g_pols: list[list[int]]         # group -> policy columns it fills
+
+
+def _grid_structure(policies, r_total: int, windows: str) -> _GridStructure:
+    key_param = distinct_window_params(policies, r_total, windows)
+    w_index = {k: i for i, k in enumerate(key_param)}
+    akey_index: dict[tuple, int] = {}
+    g_index: dict[tuple, int] = {}
+    s = _GridStructure(key_param, [], [], [], [], [])
+    for pi, pol in enumerate(policies):
+        wkey = _window_key(pol, r_total, windows)
+        b0 = None if pol.beta0 is None else round(pol.beta0, 12)
+        akey = wkey + (b0,)
+        ai = akey_index.get(akey)
+        if ai is None:
+            ai = akey_index[akey] = len(s.a_plan)
+            s.a_plan.append(w_index[wkey])
+            s.a_beta0.append(pol.beta0)
+        gkey = akey + (_bid_key(pol.bid),)
+        gi = g_index.get(gkey)
+        if gi is None:
+            gi = g_index[gkey] = len(s.g_bid)
+            s.g_akey.append(ai)
+            s.g_bid.append(pol.bid)
+            s.g_pols.append([pi])
+        else:
+            s.g_pols[gi].append(pi)
+    return s
+
+
 def _cloud_residuals(plan: PlanBatch, r_alloc: np.ndarray):
     """The market-independent tail of ``_simulate_plan``: residual cloud
     workload (dust-killed), effective parallelism, pins, self-owned stats.
@@ -153,6 +251,8 @@ def build_grid_plan(
     pool: str = "dedicated",
     availability=None,
     slots_per_unit: int = 12,
+    n_scenarios: int | None = None,
+    plan_backend: str = "host",
 ) -> GridPlan:
     """Deduplicate (jobs x policies) into evaluation groups.
 
@@ -160,64 +260,81 @@ def build_grid_plan(
     counterfactual evaluator TOLA uses; ``availability`` optionally replaces
     the constant ``r_total`` with a realized residual-occupancy query, or a
     LIST of per-scenario queries — one per market scenario of the batch —
-    for scenario-batched pool refinement).
+    for scenario-batched pool refinement; pass ``n_scenarios`` so the list
+    length is validated HERE, before an (S', J, L) stack of the wrong S
+    ships to a backend).
     ``pool="shared"`` replays the chronological shared-pool allocation per
     policy (the realized ``run_jobs`` semantics used by fixed-policy sweeps).
+    ``plan_backend="device"`` builds the plan tensors as one fused jit
+    program (see module docstring); requires jax and ``pool="dedicated"``.
     """
     if pool not in ("dedicated", "shared"):
         raise ValueError(f"unknown pool mode {pool!r}")
-    J = len(jobs)
+    if plan_backend not in _PLAN_BACKENDS:
+        raise ValueError(f"unknown plan backend {plan_backend!r}; pick from "
+                         f"{_PLAN_BACKENDS}")
+    if isinstance(availability, (list, tuple)) and n_scenarios is not None \
+            and len(availability) != n_scenarios:
+        raise ValueError(
+            f"per-scenario availability needs one query per scenario "
+            f"({len(availability)} queries, {n_scenarios} scenarios)")
+    if plan_backend == "device" and pool == "shared":
+        raise ValueError(
+            "plan_backend='device' supports pool='dedicated' only (the "
+            "chronological shared-pool replay is host code)")
 
-    t0 = time.perf_counter()
-    key_param = distinct_window_params(policies, r_total, windows)
+    structure = _grid_structure(policies, r_total, windows)
     arrays = job_arrays(jobs)
+    if plan_backend == "device":
+        return _build_grid_plan_device(jobs, policies, structure, arrays,
+                                       r_total, windows, selfowned,
+                                       availability)
+    return _build_grid_plan_host(jobs, policies, structure, arrays, r_total,
+                                 windows, selfowned, pool, availability,
+                                 slots_per_unit)
+
+
+def _build_grid_plan_host(jobs, policies, s: _GridStructure, arrays, r_total,
+                          windows, selfowned, pool, availability,
+                          slots_per_unit) -> GridPlan:
+    t0 = time.perf_counter()
     if windows == "even":
         built = build_plans_batch(jobs, windows="even", arrays=arrays)
     else:
-        built = build_plans_batch(jobs, list(key_param.values()),
+        built = build_plans_batch(jobs, list(s.key_param.values()),
                                   windows="dealloc", arrays=arrays)
-    plans: dict[tuple, PlanBatch] = dict(zip(key_param, built))
     plan_seconds = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    alloc: dict[tuple, np.ndarray] = {}
-    group_of: dict[tuple, EvalGroup] = {}
+    alloc: list[np.ndarray] = [
+        _group_alloc(built[s.a_plan[ai]], s.a_beta0[ai], r_total, selfowned,
+                     pool, availability, slots_per_unit)
+        for ai in range(len(s.a_plan))]
     groups: list[EvalGroup] = []
-    for pi, pol in enumerate(policies):
-        wkey = _window_key(pol, r_total, windows)
-        plan = plans[wkey]
-        b0 = None if pol.beta0 is None else round(pol.beta0, 12)
-        akey = wkey + (b0,)
-        if akey not in alloc:
-            alloc[akey] = _group_alloc(plan, pol, r_total, selfowned, pool,
-                                       availability, slots_per_unit)
-        gkey = akey + (round(pol.bid, 12),)
-        if gkey in group_of:
-            group_of[gkey].policy_idx = np.append(
-                group_of[gkey].policy_idx, pi)
-            continue
-        r_alloc = alloc[akey]
+    for gi in range(len(s.g_bid)):
+        ai = s.g_akey[gi]
+        plan = built[s.a_plan[ai]]
+        r_alloc = alloc[ai]
         z_t, d_eff, pins, so_work, so_res = _cloud_residuals(plan, r_alloc)
-        g = EvalGroup(plan=plan, policy_idx=np.array([pi]), bid=pol.bid,
-                      r_alloc=r_alloc, z_t=z_t, d_eff=d_eff, pins=pins,
-                      selfowned_work=so_work, selfowned_reserved=so_res)
-        group_of[gkey] = g
-        groups.append(g)
+        groups.append(EvalGroup(
+            plan=plan, policy_idx=np.asarray(s.g_pols[gi]), bid=s.g_bid[gi],
+            r_alloc=r_alloc, z_t=z_t, d_eff=d_eff, pins=pins,
+            selfowned_work=so_work, selfowned_reserved=so_res))
     pool_seconds = time.perf_counter() - t0
-    some_plan = built[0]
     return GridPlan(jobs=jobs, policies=policies, groups=groups,
-                    workload=some_plan.workload,
-                    arrival=some_plan.arrival, n_jobs=J,
-                    n_policies=len(policies), L=some_plan.z.shape[1],
-                    plan_seconds=plan_seconds, pool_seconds=pool_seconds)
+                    workload=built[0].workload, arrival=built[0].arrival,
+                    n_jobs=len(jobs), n_policies=len(policies),
+                    L=built[0].z.shape[1], plan_seconds=plan_seconds,
+                    pool_seconds=pool_seconds, plan_backend="host")
 
 
-def _group_alloc(plan: PlanBatch, pol: Policy, r_total: int, selfowned: str,
-                 pool: str, availability, slots_per_unit: int) -> np.ndarray:
+def _group_alloc(plan: PlanBatch, pol_beta0: float | None, r_total: int,
+                 selfowned: str, pool: str, availability,
+                 slots_per_unit: int) -> np.ndarray:
     if r_total <= 0:
         return np.zeros_like(plan.z)
     beta0 = np.full(plan.z.shape[0],
-                    np.nan if pol.beta0 is None else pol.beta0)
+                    np.nan if pol_beta0 is None else pol_beta0)
     if pool == "shared":
         # Chronological shared-pool replay on the planned windows; each
         # policy of a sweep owns a fresh pool (sweep semantics of run_jobs).
@@ -239,3 +356,155 @@ def _group_alloc(plan: PlanBatch, pol: Policy, r_total: int, selfowned: str,
     r_alloc = _selfowned_counts_vec(
         plan.z, plan.delta, plan.sizes, beta0[:, None], avail, selfowned)
     return np.where(plan.mask, r_alloc, 0.0)
+
+
+# --------------------------------------------------------------------------
+# Device plan path: jobs -> plan tensors as ONE fused jit program.
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _device_plan_fns(selfowned_mode: str, windows: str):
+    """Jitted device builders, cached per (self-owned mode, window mode).
+
+    ``full`` is the fused query-free program (windows -> plans -> policy-(12)
+    counts -> residuals -> group gather, one XLA computation); ``plans`` /
+    ``groups`` are the same pieces split so availability queries (host
+    callables) can run between them.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.dealloc import _jax_impls
+    from repro.core.scheduler import _selfowned_counts_impl
+
+    waterfill = _jax_impls()["window_sizes_batch"]
+    counts_fn = _selfowned_counts_impl(selfowned_mode)
+
+    def plans(e, delta, mask, omega, arrival, xs):
+        if windows == "even":
+            # xs carries the per-job Even slack share (slack_even / l).
+            sizes = jnp.where(mask, e + xs[:, None], 0.0)[None]
+        else:
+            sizes = waterfill(e, delta, mask, omega, xs)
+        cum = jnp.cumsum(sizes, axis=2)
+        ends = arrival[None, :, None] + cum
+        first = jnp.broadcast_to(arrival[None, :, None],
+                                 sizes.shape[:2] + (1,))
+        starts = jnp.concatenate([first, ends[:, :, :-1]], axis=2)
+        # The raw waterfill sizes ride along: recomputing them as
+        # ends - starts would round-trip through the cumsum and inflate the
+        # f32 noise ~L-fold, blowing the policy-(12) knife-edge guards
+        # (every fully-capped task sits EXACTLY at f(beta_0) = 0).
+        return sizes, starts, ends
+
+    def groups(z, delta, mask, sizes, plan_of_akey, b0_of_akey,
+               avail, akey_of_group):
+        sizes_a = sizes[plan_of_akey]                   # (Ga, J, L)
+        b0 = b0_of_akey[:, None, None]
+        if avail.ndim == 4:                             # (Ga, S, J, L)
+            sizes_a = sizes_a[:, None]
+            b0 = b0[:, None]
+        # Broadcast up front: a counts rule need not touch every operand
+        # (naive = min(avail, delta) ignores the sizes), but the group
+        # gather below indexes axis 0 as the akey axis, so r must carry
+        # the full combined shape.
+        shape = jnp.broadcast_shapes(sizes_a.shape, jnp.shape(avail),
+                                     z.shape)
+        r = jnp.broadcast_to(
+            jnp.where(mask, counts_fn(z, delta, sizes_a, b0, avail), 0.0),
+            shape)
+        z_t = jnp.maximum(z - r * sizes_a, 0.0)
+        z_t = jnp.where(z_t <= _DEVICE_DUST * (z + 1.0), 0.0, z_t)
+        d_eff = jnp.maximum(delta - r, 0.0)
+        so_work = jnp.minimum(r * sizes_a, z).sum(axis=-1)
+        so_res = (r * sizes_a).sum(axis=-1)
+        gi = akey_of_group
+        return (r[gi], z_t[gi], d_eff[gi], r[gi] > 0,
+                so_work[gi], so_res[gi])
+
+    def full(e, delta, mask, omega, arrival, z, xs, plan_of_akey,
+             b0_of_akey, avail, akey_of_group):
+        sizes, starts, ends = plans(e, delta, mask, omega, arrival, xs)
+        return (starts, ends) + groups(z, delta, mask, sizes,
+                                       plan_of_akey, b0_of_akey, avail,
+                                       akey_of_group)
+
+    return {"plans": jax.jit(plans), "groups": jax.jit(groups),
+            "full": jax.jit(full)}
+
+
+def _build_grid_plan_device(jobs, policies, s: _GridStructure, arrays,
+                            r_total, windows, selfowned,
+                            availability) -> GridPlan:
+    import jax
+    import jax.numpy as jnp
+
+    # Same validation the host waterfill performs (device code would
+    # silently clamp instead of raising).
+    if np.any(arrays.omega < -1e-9):
+        raise ValueError("infeasible job: window < critical path")
+    if windows == "even":
+        xs = np.maximum(arrays.slack_even(), 0.0) / arrays.l
+    else:
+        xs = np.fromiter(s.key_param.values(), dtype=np.float64)
+        if np.any((xs <= 0.0) | (xs > 1.0)):
+            bad = xs[(xs <= 0.0) | (xs > 1.0)][0]
+            raise ValueError(f"Dealloc parameter must be in (0, 1], got {bad}")
+    fns = _device_plan_fns(selfowned, windows)
+    plan_of_akey = np.asarray(s.a_plan, np.int32)
+    b0 = np.asarray([np.nan if b is None else b for b in s.a_beta0])
+    akey_of_group = np.asarray(s.g_akey, np.int32)
+
+    t0 = time.perf_counter()
+    if availability is None or r_total <= 0:
+        # The fused program: no host staging between windows and residuals.
+        out = jax.block_until_ready(fns["full"](
+            arrays.e, arrays.delta, arrays.mask, arrays.omega, arrays.arrival,
+            arrays.z, xs, plan_of_akey, b0, float(max(r_total, 0)),
+            akey_of_group))
+        (starts, ends), parts = out[:2], out[2:]
+        plan_seconds = time.perf_counter() - t0
+        pool_seconds = 0.0
+    else:
+        sizes, starts, ends = jax.block_until_ready(fns["plans"](
+            arrays.e, arrays.delta, arrays.mask, arrays.omega,
+            arrays.arrival, xs))
+        plan_seconds = time.perf_counter() - t0
+        # Availability queries are host callables: stage the planned windows
+        # out once, query per distinct (plan, beta_0) cell, ship back.
+        t0 = time.perf_counter()
+        h_starts, h_ends = np.asarray(starts), np.asarray(ends)
+        if isinstance(availability, (list, tuple)):
+            avail = np.stack([[q(h_starts[p], h_ends[p])
+                               for q in availability] for p in plan_of_akey])
+        else:
+            avail = np.stack([availability(h_starts[p], h_ends[p])
+                              for p in plan_of_akey])
+        parts = jax.block_until_ready(fns["groups"](
+            arrays.z, arrays.delta, arrays.mask, sizes, plan_of_akey,
+            b0, jnp.asarray(avail), akey_of_group))
+        pool_seconds = time.perf_counter() - t0
+
+    nan = np.full(len(jobs), np.nan)
+    dev_plans = [PlanBatch(arrival=arrays.arrival, starts=starts[w],
+                           ends=ends[w], z=arrays.z, delta=arrays.delta,
+                           mask=arrays.mask, bid=nan, beta0=nan)
+                 for w in range(len(s.key_param))]
+    r_g, z_t_g, d_eff_g, pins_g, so_w_g, so_r_g = parts
+    # The self-owned stats are consumed host-side only (the EngineResult
+    # scatter); ship the two small stacks across once here instead of one
+    # device sync per group later. Everything the cost kernels read
+    # (ends/starts, z_t, d_eff, pins) stays on device.
+    so_w_g, so_r_g = np.asarray(so_w_g), np.asarray(so_r_g)
+    groups = [EvalGroup(plan=dev_plans[s.a_plan[s.g_akey[gi]]],
+                        policy_idx=np.asarray(s.g_pols[gi]),
+                        bid=s.g_bid[gi], r_alloc=r_g[gi], z_t=z_t_g[gi],
+                        d_eff=d_eff_g[gi], pins=pins_g[gi],
+                        selfowned_work=so_w_g[gi],
+                        selfowned_reserved=so_r_g[gi])
+              for gi in range(len(s.g_bid))]
+    return GridPlan(jobs=jobs, policies=policies, groups=groups,
+                    workload=arrays.z.sum(axis=1), arrival=arrays.arrival,
+                    n_jobs=len(jobs), n_policies=len(policies),
+                    L=arrays.z.shape[1], plan_seconds=plan_seconds,
+                    pool_seconds=pool_seconds, plan_backend="device")

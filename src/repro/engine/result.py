@@ -32,7 +32,11 @@ class EngineResult:
     selfowned_reserved: np.ndarray  # availability queries
     backend: str = "numpy"
     single_market: bool = False    # True when the caller passed one market
-    timings: dict | None = None    # plan / pool / eval wall seconds
+    # Phase wall seconds: "plan" (window tensors), "pool" (self-owned +
+    # residuals; host availability queries on the staged device path),
+    # "eval" (backend market realization), "plan_device" (seconds the plan
+    # tensors were built on device — 0.0 on the host plan path).
+    timings: dict | None = None
 
     @property
     def n_scenarios(self) -> int:

@@ -181,3 +181,34 @@ def test_engine_result_accessors():
     total = (res.spot_work[0, :, p] + res.ondemand_work[0, :, p]
              + res.selfowned_work[:, p])
     np.testing.assert_allclose(total, res.workload, rtol=1e-9)
+
+
+def test_available_backends_probes_pallas(monkeypatch):
+    """"pallas" is advertised only when jax.experimental.pallas actually
+    imports — a jax build without it must fail at SELECTION time with a
+    message naming the missing piece, not mid-run."""
+    import sys
+
+    pytest.importorskip("jax")
+    # Poison the pallas module: `import jax.experimental.pallas` now raises
+    # ImportError even though `import jax` still succeeds.
+    monkeypatch.setitem(sys.modules, "jax.experimental.pallas", None)
+    avail = available_backends()
+    assert "jax" in avail and "pallas" not in avail
+    with pytest.raises(ValueError, match="jax.experimental.pallas"):
+        resolve_backend("pallas")
+    monkeypatch.undo()
+    assert "pallas" in available_backends()
+    assert resolve_backend("pallas") == "pallas"
+
+
+def test_resolve_backend_env_override_validated(monkeypatch):
+    """An invalid REPRO_ENGINE_BACKEND value is reported as the ENV problem
+    it is (naming the variable), instead of blaming the caller's "auto"."""
+    monkeypatch.setenv("REPRO_ENGINE_BACKEND", "cuda")
+    with pytest.raises(ValueError, match="REPRO_ENGINE_BACKEND"):
+        resolve_backend("auto")
+    # explicit backends bypass the env override entirely
+    assert resolve_backend("numpy") == "numpy"
+    monkeypatch.setenv("REPRO_ENGINE_BACKEND", "numpy")
+    assert resolve_backend("auto") == "numpy"

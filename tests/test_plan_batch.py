@@ -223,3 +223,284 @@ def test_per_scenario_availability_backend_parity(backend, early_start):
                         **kw)
     np.testing.assert_allclose(got.unit_cost, ref.unit_cost,
                                atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# window_sizes_batch knife edges (bit-identity with the sequential Alg.-1
+# loop on the paths a generic random stream rarely exercises)
+# ---------------------------------------------------------------------------
+
+def _chain(arrival, deadline, zs, deltas):
+    from repro.core.types import ChainJob, Task
+
+    return ChainJob(arrival=arrival, deadline=deadline,
+                    tasks=tuple(Task(z=z, delta=d)
+                                for z, d in zip(zs, deltas)))
+
+
+def _assert_batch_matches_loop(jobs, xs):
+    a = job_arrays(jobs)
+    got = window_sizes_batch(a.e, a.delta, a.mask, a.omega, xs)
+    for g, x in enumerate(xs):
+        for ji, job in enumerate(jobs):
+            np.testing.assert_array_equal(
+                got[g, ji, :job.l], window_sizes(job, float(x)),
+                err_msg=f"x={x} job={ji}")
+            assert np.all(got[g, ji, job.l:] == 0.0)  # padding takes none
+
+
+def test_window_sizes_batch_single_task_residual():
+    """Single-task jobs whose slack exceeds the cap: the overflow parks on
+    the one task (order[0]) exactly like the sequential residual branch."""
+    jobs = [_chain(0.0, 12.0, [4.0], [2.0]),      # e=2, cap(0.5)=2, slack 10
+            _chain(3.0, 5.0, [1.5], [3.0]),       # e=0.5, slack 1.5
+            _chain(1.0, 1.5, [0.5], [1.0])]       # zero slack single task
+    _assert_batch_matches_loop(jobs, np.array([0.25, 0.5, 0.9]))
+
+
+def test_window_sizes_batch_x_one_zero_cap():
+    """x == 1.0: every cap is zero, so ALL slack is residual and parks on
+    the max-delta task (ties broken by the stable sort, matching the loop)."""
+    jobs = [_chain(0.0, 20.0, [2.0, 6.0, 1.0], [1.0, 4.0, 2.0]),
+            # tie on delta: residual must land on the FIRST max-delta task
+            _chain(2.0, 15.0, [3.0, 3.0, 2.0], [2.0, 2.0, 2.0]),
+            _chain(0.0, 9.0, [4.0], [2.0])]
+    _assert_batch_matches_loop(jobs, np.array([1.0]))
+    # and mixed with x < 1 parameters in the same grid pass
+    _assert_batch_matches_loop(jobs, np.array([0.5, 1.0, 0.8]))
+
+
+def test_window_sizes_batch_all_slack_exhausted_break():
+    """A grid where every job's slack is zero takes the early ``break`` (rem
+    never populated) and must stay bit-identical to the sequential loop —
+    all windows exactly the minimum execution times."""
+    jobs = [_chain(0.0, 2.0, [2.0, 4.0], [2.0, 4.0]),     # window == e.sum()
+            _chain(1.0, 3.5, [1.0, 3.0], [1.0, 2.0]),
+            _chain(0.5, 2.0, [1.5, 3.0], [2.0, 4.0])]
+    xs = np.array([0.3, 0.625, 1.0])
+    a = job_arrays(jobs)
+    assert np.all(a.omega == 0.0)
+    got = window_sizes_batch(a.e, a.delta, a.mask, a.omega, xs)
+    np.testing.assert_array_equal(
+        got, np.broadcast_to(a.e, got.shape), err_msg="sizes must equal e")
+    _assert_batch_matches_loop(jobs, xs)
+
+
+# ---------------------------------------------------------------------------
+# GridPlan bid dedup (rounded-key regression) + plan-layer availability check
+# ---------------------------------------------------------------------------
+
+def test_gridplan_bid_lookup_uses_rounded_key():
+    """Bids differing at the 13th decimal collapse into ONE group, and
+    groups_for_bid finds that group under EITHER raw float (regression:
+    raw-float comparison silently returned [])."""
+    from repro.engine.plan import build_grid_plan
+
+    jobs = generate_chain_jobs(6, 2, seed=2)
+    b1, b2 = 0.27, 0.27 + 1e-13
+    assert b1 != b2                      # genuinely distinct floats
+    pols = [Policy(beta=0.5, bid=b1), Policy(beta=0.5, bid=b2),
+            Policy(beta=0.5, bid=0.3)]
+    gplan = build_grid_plan(jobs, pols, r_total=0)
+    assert len(gplan.groups) == 2
+    assert len(gplan.bids) == 2
+    g1 = gplan.groups_for_bid(b1)
+    g2 = gplan.groups_for_bid(b2)
+    assert g1 == g2 and len(g1) == 1
+    assert sorted(g1[0].policy_idx.tolist()) == [0, 1]
+    # every policy column is covered exactly once across bids
+    covered = np.concatenate(
+        [g.policy_idx for b in gplan.bids for g in gplan.groups_for_bid(b)])
+    assert sorted(covered.tolist()) == [0, 1, 2]
+
+
+def test_availability_length_checked_in_plan_layer():
+    """A mismatched per-scenario availability list fails loudly inside
+    build_grid_plan (not via a later backend shape error)."""
+    from repro.engine.plan import build_grid_plan
+
+    jobs = generate_chain_jobs(5, 1, seed=3)
+    pols = selfowned_policies()[:2]
+    q = lambda s0, e0: np.full_like(s0, 5.0)
+    with pytest.raises(ValueError, match="one query per scenario"):
+        build_grid_plan(jobs, pols, 40, availability=[q], n_scenarios=2)
+    # without n_scenarios the caller opted out of the check (S' = len(list))
+    gp = build_grid_plan(jobs, pols, 40, availability=[q, q])
+    assert gp.per_scenario
+
+
+# ---------------------------------------------------------------------------
+# Device plan path: parity with the f64 canonical plan layer, hot-path
+# device residency, and the jitted core twins
+# ---------------------------------------------------------------------------
+
+def test_expected_spot_work_jax_parity():
+    pytest.importorskip("jax")
+    from repro.core.dealloc import expected_spot_work, expected_spot_work_jax
+
+    rng = np.random.default_rng(2)
+    z = rng.uniform(0.1, 30.0, (40, 5))
+    delta = rng.choice([1.0, 2.0, 8.0], (40, 5))
+    sizes = z / delta + rng.uniform(0.0, 4.0, (40, 5))
+    for x in (0.3, 0.625, 1.0):
+        want = expected_spot_work(z, delta, sizes, x)
+        got = np.asarray(expected_spot_work_jax(z, delta, sizes, x))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["prop12", "naive"])
+def test_selfowned_counts_jax_parity(mode):
+    """The jitted policy-(12) twin matches the f64 oracle exactly on generic
+    (non-knife-edge) grids, including the NaN-beta0 convention."""
+    pytest.importorskip("jax")
+    from repro.core.scheduler import (
+        _selfowned_counts_vec,
+        selfowned_counts_vec_jax,
+    )
+
+    rng = np.random.default_rng(7)
+    z = rng.uniform(0.3, 6.0, (30, 4))
+    delta = rng.choice([1.0, 2.0, 4.0], (30, 4))
+    sizes = rng.uniform(0.4, 3.0, (30, 4))
+    beta0 = rng.choice([0.31, 0.57, np.nan], (30, 1))
+    for avail in (7.0, rng.uniform(0.0, 5.0, (2, 30, 4))):
+        want = _selfowned_counts_vec(z, delta, sizes, beta0, avail, mode)
+        got = np.asarray(selfowned_counts_vec_jax(z, delta, sizes, beta0,
+                                                  avail, mode=mode))
+        if np.isscalar(avail):
+            # integral counts (or the integral pool bound): exact match
+            np.testing.assert_array_equal(got, want)
+        else:
+            # a continuous availability query can be the binding min —
+            # then the result is the f32-rounded query value itself
+            np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("job_type", [1, 2, 3, 4])
+def test_device_plan_parity_exp_grids(job_type):
+    """evaluate_grid with the device plan path matches the f64 canonical
+    (host plan + numpy oracle) to <=1e-5 over the exp1-exp4 workloads."""
+    pytest.importorskip("jax")
+    from repro.engine import evaluate_grid
+
+    jobs = generate_chain_jobs(30, job_type, seed=5 + job_type)
+    markets = make_scenarios(max(j.deadline for j in jobs) + 1, 2, seed=7)
+    grid = spot_od_policies() + selfowned_policies()[::7]
+    ref = evaluate_grid(jobs, grid, markets, 60, backend="numpy")
+    dev = evaluate_grid(jobs, grid, markets, 60, backend="jax",
+                        plan_backend="device")
+    assert dev.timings["plan_device"] > 0.0
+    np.testing.assert_allclose(dev.unit_cost, ref.unit_cost,
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(dev.selfowned_work, ref.selfowned_work,
+                               atol=1e-2, rtol=1e-4)
+
+
+def test_device_plan_hot_path_never_calls_host_plan_layer(monkeypatch):
+    """backend="jax" (plan_backend auto -> device) must not touch the host
+    f64 plan builders: window_sizes_batch, build_plans_batch and the host
+    policy-(12) counts are all stubbed out to fail loudly."""
+    pytest.importorskip("jax")
+    import sys
+
+    import repro.core.scheduler as sched_mod
+    import repro.engine.plan as plan_mod
+    from repro.engine import evaluate_grid
+
+    # repro.core re-exports a `dealloc` FUNCTION that shadows the submodule
+    # attribute, so fetch the module object itself.
+    dealloc_mod = sys.modules["repro.core.dealloc"]
+
+    jobs = generate_chain_jobs(12, 2, seed=4)
+    markets = make_scenarios(max(j.deadline for j in jobs) + 1, 2, seed=9)
+    pols = selfowned_policies()[::40]
+
+    def boom(*a, **k):
+        raise AssertionError("host plan layer called on the device path")
+
+    monkeypatch.setattr(plan_mod, "build_plans_batch", boom)
+    monkeypatch.setattr(plan_mod, "_selfowned_counts_vec", boom)
+    monkeypatch.setattr(sched_mod, "window_sizes_batch", boom)
+    monkeypatch.setattr(dealloc_mod, "window_sizes_batch", boom)
+    res = evaluate_grid(jobs, pols, markets, 50, backend="jax")
+    assert res.timings["plan_device"] > 0.0
+    monkeypatch.undo()
+    ref = evaluate_grid(jobs, pols, markets, 50, backend="numpy")
+    np.testing.assert_allclose(res.unit_cost, ref.unit_cost,
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_device_plan_single_availability_query_parity():
+    """The staged device path (host availability callables between the two
+    jit stages) matches the host plan for a single shared query."""
+    pytest.importorskip("jax")
+    from repro.engine import evaluate_grid
+
+    jobs = generate_chain_jobs(18, 3, seed=6)
+    markets = make_scenarios(max(j.deadline for j in jobs) + 1, 2, seed=11)
+    pols = selfowned_policies()[::30]
+    q = lambda s0, e0: np.maximum(35.0 - 0.25 * s0, 0.0)
+    ref = evaluate_grid(jobs, pols, markets, 50, availability=q,
+                        backend="numpy")
+    dev = evaluate_grid(jobs, pols, markets, 50, availability=q,
+                        backend="jax", plan_backend="device")
+    assert dev.timings["pool"] > 0.0      # staged leg, not the fused one
+    np.testing.assert_allclose(dev.unit_cost, ref.unit_cost,
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_device_plan_pallas_backend_parity():
+    """The pallas (interpret) backend consumes device plan tensors and
+    agrees with the canonical path."""
+    pytest.importorskip("jax")
+    from repro.engine import evaluate_grid
+
+    jobs = generate_chain_jobs(8, 2, seed=12)
+    markets = make_scenarios(max(j.deadline for j in jobs) + 1, 2, seed=13)
+    pols = selfowned_policies()[::60]
+    ref = evaluate_grid(jobs, pols, markets, 40, backend="numpy")
+    dev = evaluate_grid(jobs, pols, markets, 40, backend="pallas",
+                        plan_backend="device", interpret=True)
+    np.testing.assert_allclose(dev.unit_cost, ref.unit_cost,
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_plan_backend_resolution():
+    pytest.importorskip("jax")
+    from repro.engine import evaluate_grid, resolve_plan_backend
+
+    assert resolve_plan_backend("auto", "numpy") == "host"
+    assert resolve_plan_backend("auto", "jax") == "device"
+    assert resolve_plan_backend("auto", "pallas") == "device"
+    assert resolve_plan_backend("auto", "jax", pool="shared") == "host"
+    assert resolve_plan_backend("host", "numpy") == "host"
+    with pytest.raises(ValueError, match="host-only"):
+        resolve_plan_backend("device", "numpy")
+    with pytest.raises(ValueError, match="shared"):
+        resolve_plan_backend("device", "jax", pool="shared")
+    with pytest.raises(ValueError, match="unknown plan backend"):
+        resolve_plan_backend("tpu", "jax")
+
+    jobs = generate_chain_jobs(4, 1, seed=1)
+    m = make_scenarios(max(j.deadline for j in jobs) + 1, 1, seed=1)
+    with pytest.raises(ValueError, match="host-only"):
+        evaluate_grid(jobs, [Policy(beta=0.5, bid=0.2)], m,
+                      backend="numpy", plan_backend="device")
+
+
+def test_device_plan_naive_scalar_availability_parity():
+    """Regression: the naive counts rule ignores the window sizes, so with a
+    SCALAR availability its result used to drop the akey axis and the group
+    gather sliced the wrong dimension (exp4's Even-benchmark leg)."""
+    pytest.importorskip("jax")
+    from repro.engine import evaluate_grid
+
+    jobs = generate_chain_jobs(14, 2, seed=15)
+    markets = make_scenarios(max(j.deadline for j in jobs) + 1, 2, seed=16)
+    pols = [Policy(beta=0.5, bid=b, beta0=0.4) for b in (0.18, 0.27)]
+    kw = dict(windows="even", selfowned="naive", early_start=False)
+    ref = evaluate_grid(jobs, pols, markets, 40, backend="numpy", **kw)
+    dev = evaluate_grid(jobs, pols, markets, 40, backend="jax",
+                        plan_backend="device", **kw)
+    np.testing.assert_allclose(dev.unit_cost, ref.unit_cost,
+                               atol=1e-5, rtol=1e-5)
