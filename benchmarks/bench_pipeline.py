@@ -10,8 +10,23 @@ vectorized (G, J, L) pass over the deduplicated window-parameter grid)
 against the legacy per-group ``build_plans`` loop it replaced, and — for
 every non-numpy backend — the HOST plan path (f64 numpy oracle) against
 the DEVICE plan path (``plan_backend="device"``: the whole jobs->plan
-tensor pass as one jit program, ``<backend>+device-plan`` entries). Emits
-``BENCH_pipeline.json``:
+tensor pass as one jit program, ``<backend>+device-plan`` entries).
+
+Scenario legs (the stream side of the pipeline):
+
+* ``scenario_synthesis`` — price-path construction throughput, host
+  materialized list (``make_scenarios``, one numpy Generator + SpotMarket
+  per scenario) vs declarative ``ScenarioSpec`` (counter-hash synthesis:
+  f64 oracle rows, and the jitted device generator when jax is present),
+  S swept geometrically up to ``--scenario-sweep-max`` (default 4096) over
+  the same horizon as the grid.
+* ``<backend>+spec-stream`` — the full end-to-end pass from a
+  ``ScenarioSpec`` with ``scenario_chunk`` (chunked device synthesis +
+  evaluation against one shared grid plan), gated in CI with the same
+  2x per-cell regression rule as the other legs; its cost tensor is
+  cross-checked against the numpy oracle on the SAME spec.
+
+Emits ``BENCH_pipeline.json``:
 
     PYTHONPATH=src python -m benchmarks.bench_pipeline \
         [--jobs 512] [--policies 70] [--scenarios 4] [--r 600] \
@@ -31,7 +46,7 @@ import numpy as np
 
 from repro.core import Policy, generate_chain_jobs, selfowned_policies
 from repro.core.scheduler import build_plans, build_plans_batch
-from repro.engine import evaluate_grid, make_scenarios
+from repro.engine import ScenarioSpec, evaluate_grid, make_scenarios
 from repro.engine.plan import distinct_window_params
 
 __all__ = ["run", "main"]
@@ -46,9 +61,54 @@ def _best_of(fn, iters: int) -> float:
     return best
 
 
+def _synth_sweep(horizon: float, n_scenarios: int, sweep_max: int,
+                 seed: int, iters: int) -> dict:
+    """Scenario-synthesis throughput: host list vs spec (numpy / device)."""
+    try:
+        import jax
+        has_jax = True
+    except Exception:
+        has_jax = False
+    from repro.engine.scenarios import SynthBatch, _device_synth_fn
+
+    sweep = []
+    S = max(n_scenarios, 64)
+    sizes = []
+    while S <= sweep_max:
+        sizes.append(S)
+        S *= 4
+    for S in sizes:
+        spec = ScenarioSpec("fresh", horizon, S, seed=seed + 1000)
+        cells = S * spec.n_slots
+        it = 1 if S > 1024 else iters   # the big host lists take seconds
+        t_list = _best_of(
+            lambda: make_scenarios(horizon, S, seed=seed + 1000), it)
+        t_spec = _best_of(lambda: spec.prices(), it)
+        entry = {"S": S, "n_slots": spec.n_slots, "cells": cells,
+                 "host_list_seconds": t_list,
+                 "spec_numpy_seconds": t_spec,
+                 "spec_numpy_speedup": t_list / t_spec}
+        msg = (f"[synth S={S:5d}] list {t_list:7.3f}s  "
+               f"spec {t_spec:7.3f}s ({t_list / t_spec:.1f}x)")
+        if has_jax:
+            def dev():
+                SynthBatch(spec, 0, S, device=True).prepare()
+
+            dev()                        # absorb the jit compile
+            entry["spec_device_seconds"] = _best_of(dev, it)
+            entry["spec_device_speedup"] = (t_list
+                                            / entry["spec_device_seconds"])
+            msg += (f"  device {entry['spec_device_seconds']:7.3f}s "
+                    f"({entry['spec_device_speedup']:.1f}x)")
+            _device_synth_fn.cache_clear()  # free the big per-S programs
+        sweep.append(entry)
+        print(msg)
+    return {"kind": "fresh", "sweep": sweep}
+
+
 def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
         backends: list[str], seed: int = 0, job_type: int = 2,
-        iters: int = 3) -> dict:
+        iters: int = 3, scenario_sweep_max: int = 4096) -> dict:
     if iters < 1:
         raise ValueError("need --iters >= 1 (one timed pass after warmup)")
     jobs = generate_chain_jobs(n_jobs, job_type, seed=seed)
@@ -119,6 +179,7 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
             "plan_seconds": phases["plan"],
             "pool_seconds": phases["pool"],
             "eval_seconds": phases["eval"],
+            "synth_seconds": phases.get("synth", 0.0),
             "plan_device_seconds": phases["plan_device"],
             "interpret": backend == "pallas"
             and out["jax_backend"] == "cpu",
@@ -140,6 +201,58 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
               f"(plan {phases['plan']:.3f}  pool {phases['pool']:.3f}  "
               f"eval {phases['eval']:.3f})  "
               f"{cells / best / 1e3:9.1f}k cells/s{tag}")
+
+    # --- chunked scenario stream from a declarative spec -----------------
+    # Same grid, but the scenarios come from a ScenarioSpec streamed
+    # scenario_chunk per pass (device-synthesized price paths on the
+    # non-numpy backends). Cross-checked against the numpy oracle on the
+    # SAME spec (the list-path ref above realizes different prices).
+    spec = ScenarioSpec("fresh", horizon, n_scenarios, seed=seed + 1000)
+    chunk = max(1, n_scenarios // 2)
+    spec_ref = evaluate_grid(jobs, grid, spec, r_total,
+                             backend="numpy").unit_cost
+    for backend in [b for b in backends if b != "numpy"]:
+        name = f"{backend}+spec-stream"
+        res = None
+        best = np.inf
+        phases = None
+        for it in range(iters + 1):
+            t0 = time.perf_counter()
+            res = evaluate_grid(jobs, grid, spec, r_total, backend=backend,
+                                scenario_chunk=chunk)
+            dt = time.perf_counter() - t0
+            if it == 0:
+                warmup = dt
+            elif dt < best:
+                best, phases = dt, dict(res.timings)
+        entry = {
+            "end_to_end_seconds": best,
+            "warmup_seconds": warmup,
+            "cells_per_sec_end_to_end": cells / best,
+            "plan_seconds": phases["plan"],
+            "pool_seconds": phases["pool"],
+            "eval_seconds": phases["eval"],
+            "synth_seconds": phases["synth"],
+            "plan_device_seconds": phases["plan_device"],
+            "scenario_chunk": chunk,
+            "n_chunks": len(phases["chunks"]),
+            "interpret": backend == "pallas"
+            and out["jax_backend"] == "cpu",
+            "max_abs_diff_vs_numpy_spec": float(
+                np.abs(res.unit_cost - spec_ref).max()),
+        }
+        if entry["interpret"]:
+            entry["note"] = ("pallas kernels ran in INTERPRET mode on CPU — "
+                             "kernel-logic timing, NOT TPU speed; do not "
+                             "compare against the numpy/jax entries")
+        out["backends"][name] = entry
+        print(f"[{name:16s}] {best:7.3f}s end-to-end  "
+              f"(plan {phases['plan']:.3f}  synth {phases['synth']:.3f}  "
+              f"eval {phases['eval']:.3f}, {len(phases['chunks'])} chunks)  "
+              f"{cells / best / 1e3:9.1f}k cells/s")
+
+    out["scenario_synthesis"] = _synth_sweep(horizon, n_scenarios,
+                                             scenario_sweep_max, seed, iters)
     return out
 
 
@@ -154,11 +267,13 @@ def main(argv=None):
     p.add_argument("--iters", type=int, default=3)
     p.add_argument("--backends", nargs="+", default=["numpy", "jax"],
                    choices=["numpy", "jax", "pallas"])
+    p.add_argument("--scenario-sweep-max", type=int, default=4096,
+                   help="largest S of the scenario-synthesis sweep")
     p.add_argument("--out", default="BENCH_pipeline.json")
     args = p.parse_args(argv)
     res = run(args.jobs, args.policies, args.scenarios, args.r,
               args.backends, seed=args.seed, job_type=args.job_type,
-              iters=args.iters)
+              iters=args.iters, scenario_sweep_max=args.scenario_sweep_max)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"wrote {args.out}")

@@ -15,20 +15,28 @@ import numpy as np
 
 from repro.core import generate_chain_jobs, sweep_policies
 from repro.core.scheduler import Policy
-from repro.engine import make_scenarios
+from repro.engine import ScenarioSpec, as_source, make_scenarios
 
 __all__ = ["Setup", "make_setup", "sweep_min", "greedy_min",
            "argparser", "print_table"]
 
 
 class Setup:
-    def __init__(self, jobs, markets, job_type: int, seed: int,
-                 backend: str = "auto"):
+    def __init__(self, jobs, scenarios, job_type: int, seed: int,
+                 backend: str = "auto", scenario_chunk: int | None = None):
         self.jobs = jobs
-        self.markets = markets
+        self.scenarios = scenarios      # ScenarioSource | ScenarioSpec
         self.job_type = job_type
         self.seed = seed
         self.backend = backend
+        self.scenario_chunk = scenario_chunk
+        self._source = as_source(scenarios)
+
+    @property
+    def markets(self):
+        """Materialized scenario markets (host-only consumers: the greedy
+        baseline, the realized shared-pool TOLA replay)."""
+        return self._source.markets
 
     @property
     def market(self):
@@ -42,13 +50,32 @@ class Setup:
 
 def make_setup(n_jobs: int, job_type: int, seed: int = 0,
                scenarios: int = 1, scenario_kind: str = "fresh",
-               backend: str = "auto") -> Setup:
-    """Job stream + S market scenarios (S=1 reproduces the paper setup)."""
+               backend: str = "auto",
+               scenario_chunk: int | None = None) -> Setup:
+    """Job stream + S market scenarios (S=1 reproduces the paper setup).
+
+    Without ``scenario_chunk`` the scenarios are the legacy materialized
+    ``make_scenarios`` list (bit-compatible with every earlier PR's
+    tables). With it, they are a declarative ``ScenarioSpec`` streamed
+    through the engine ``scenario_chunk`` scenarios per pass — synthesized
+    on device for the jax/pallas backends, S bounded by wall clock rather
+    than host memory (``adaptive`` requires this path: it needs the
+    stream's chunk-boundary feedback).
+    """
     jobs = generate_chain_jobs(n_jobs, job_type, seed=seed)
     horizon = max(j.deadline for j in jobs) + 1.0
-    markets = make_scenarios(horizon, max(scenarios, 1), seed=seed + 1000,
+    if scenario_chunk is not None or scenario_kind == "adaptive":
+        if scenario_chunk is None:
+            raise ValueError(
+                "--scenario-kind adaptive needs --scenario-chunk (the "
+                "adversary reacts at chunk boundaries)")
+        scn = ScenarioSpec(scenario_kind, horizon, max(scenarios, 1),
+                           seed=seed + 1000)
+    else:
+        scn = make_scenarios(horizon, max(scenarios, 1), seed=seed + 1000,
                              kind=scenario_kind)
-    return Setup(jobs, markets, job_type, seed, backend)
+    return Setup(jobs, scn, job_type, seed, backend,
+                 scenario_chunk=scenario_chunk)
 
 
 def sweep_min(setup: Setup, policies: list[Policy], **kwargs):
@@ -56,10 +83,16 @@ def sweep_min(setup: Setup, policies: list[Policy], **kwargs):
 
     One batched engine pass over policies x bids x scenarios (the alpha of
     each policy is its scenario mean); see ``repro.core.sweep_policies``.
+    For a materialized list setup the scenario source is reused across
+    sweeps, so the stacked per-bid view tensors are built once per bid,
+    not once per sweep. (Chunked spec setups trade that cache away on
+    purpose: streaming re-synthesizes each chunk so peak memory stays
+    chunk-sized.)
     """
     kwargs.setdefault("backend", setup.backend)
+    kwargs.setdefault("scenario_chunk", setup.scenario_chunk)
     pol, alpha, costs, _ = sweep_policies(setup.jobs, policies,
-                                          setup.markets, **kwargs)
+                                          setup._source, **kwargs)
     return pol, alpha, costs
 
 
@@ -84,10 +117,17 @@ def argparser(desc: str) -> argparse.ArgumentParser:
                    help="market scenarios evaluated in one engine pass "
                         "(1 = the paper's single market)")
     p.add_argument("--scenario-kind",
-                   choices=["fresh", "regime", "adversarial"],
+                   choices=["fresh", "regime", "adversarial", "adaptive"],
                    default="fresh",
                    help="market family (adversarial = lure/spike square "
-                        "waves driving worst-case TOLA regret)")
+                        "waves driving worst-case TOLA regret; adaptive = "
+                        "spikes placed by watching the learner, needs "
+                        "--scenario-chunk)")
+    p.add_argument("--scenario-chunk", type=int, default=None,
+                   help="stream scenarios through the engine K per pass "
+                        "from a declarative ScenarioSpec (device-side "
+                        "synthesis on jax/pallas; peak memory bounded by "
+                        "the chunk, so --scenarios can exceed host memory)")
     p.add_argument("--backend", default="auto",
                    choices=["auto", "numpy", "jax", "pallas"],
                    help="evaluation-engine backend")

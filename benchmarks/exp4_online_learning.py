@@ -24,8 +24,10 @@ from repro.core import (
     selfowned_policies,
     spot_od_policies,
 )
+from repro.engine import ScenarioSpec, ScenarioStream
 from repro.learn import LEARNER_KINDS, LearnerSpec, Schedule
 from repro.learn import replay as learn_replay
+from repro.learn import replay_stream
 
 
 def comparison_specs(learners: list[str], eta_grid: list[float]):
@@ -44,13 +46,15 @@ def comparison_specs(learners: list[str], eta_grid: list[float]):
 def run(n_jobs: int, rs: list[int], seed: int = 0, job_type: int = 2,
         scenarios: int = 1, scenario_kind: str = "fresh",
         backend: str = "auto", learners: list[str] | None = None,
-        eta_grid: list[float] | None = None) -> dict:
+        eta_grid: list[float] | None = None,
+        scenario_chunk: int | None = None) -> dict:
     learners = learners or ["hedge"]
     eta_grid = eta_grid or []
     compare = len(learners) > 1 or eta_grid
     out = {}
     s = make_setup(n_jobs, job_type, seed, scenarios=scenarios,
-                   scenario_kind=scenario_kind, backend=backend)
+                   scenario_kind=scenario_kind, backend=backend,
+                   scenario_chunk=scenario_chunk)
     arrivals = np.array([j.arrival for j in s.jobs])
     d = max(j.deadline - j.arrival for j in s.jobs)
     Z = np.array([j.total_work for j in s.jobs])
@@ -90,6 +94,20 @@ def run(n_jobs: int, rs: list[int], seed: int = 0, job_type: int = 2,
                                                             eta_grid),
                                   seed=seed, backend="auto")
                 out[r]["comparison"] = lr.summary()
+            if scenario_chunk:
+                # Streamed counterfactual regret straight from the spec:
+                # chunk-wise engine evaluation + replay, no (S, J, P)
+                # tensor and no per-scenario market objects on the hot
+                # path. An adaptive spec reacts to learners[0] at each
+                # chunk boundary (fresh adversary state per r).
+                assert isinstance(s.scenarios, ScenarioSpec)
+                stream = ScenarioStream(s.scenarios)
+                slr = replay_stream(
+                    s.jobs, grid, stream, r_total=r,
+                    learners=comparison_specs(learners, eta_grid),
+                    seed=seed, scenario_chunk=scenario_chunk,
+                    backend="auto", engine_backend=backend)
+                out[r]["stream"] = slr.summary()
     return out
 
 
@@ -106,7 +124,8 @@ def main(argv=None):
     args = p.parse_args(argv)
     res = run(args.jobs, args.r, args.seed, scenarios=args.scenarios,
               scenario_kind=args.scenario_kind, backend=args.backend,
-              learners=args.learner, eta_grid=args.eta_grid)
+              learners=args.learner, eta_grid=args.eta_grid,
+              scenario_chunk=args.scenario_chunk)
     rows = [[r, f"{v['alpha_tola']:.4f}", f"{v['alpha_bench']:.4f}",
              f"{v['rho_bar']:.2%}", f"{v['best_fixed']:.4f}",
              f"{v['regret']:.4f}", f"{v['top_weight']:.3f}"]
@@ -123,6 +142,17 @@ def main(argv=None):
                 for row in v.get("comparison", [])]
         print_table("Learner comparison (counterfactual dedicated-pool "
                     "replay, common random numbers)",
+                    ["r", "learner", "alpha_cf", "regret",
+                     "expected_regret", "top_weight"], rows)
+    if any("stream" in v for v in res.values()):
+        rows = [[r, row["learner"], f"{row['realized_unit']:.4f}",
+                 f"{row['regret']:.4f}", f"{row['expected_regret']:.4f}",
+                 f"{row['top_weight']:.3f}"]
+                for r, v in sorted(res.items())
+                for row in v.get("stream", [])]
+        print_table(f"Streamed regret (ScenarioSpec "
+                    f"{args.scenario_kind}, S={args.scenarios}, "
+                    f"chunk={args.scenario_chunk})",
                     ["r", "learner", "alpha_cf", "regret",
                      "expected_regret", "top_weight"], rows)
     return res

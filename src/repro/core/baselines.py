@@ -56,19 +56,23 @@ def sweep_policies(
     selfowned: str = "prop12",
     early_start: bool = True,
     backend: str = "auto",
+    scenario_chunk: int | None = None,
 ) -> "tuple[Policy, float, StreamCosts, EngineResult]":  # noqa: F821
     """min over a policy grid of the realized average unit cost.
 
     One batched engine pass with shared-pool (run_jobs) semantics across all
     policies x bids x scenarios; returns (best policy, its alpha —
     scenario-mean when several markets are given, its StreamCosts in
-    scenario 0, the full EngineResult).
+    scenario 0, the full EngineResult). ``markets`` accepts everything
+    ``evaluate_grid`` does (a market, a list, a ``ScenarioSpec`` /
+    source); ``scenario_chunk`` streams the scenario axis K per pass.
     """
     from repro.engine import evaluate_grid
 
     res = evaluate_grid(jobs, policies, markets, r_total, windows=windows,
                         selfowned=selfowned, early_start=early_start,
-                        pool="shared", backend=backend)
+                        pool="shared", backend=backend,
+                        scenario_chunk=scenario_chunk)
     p, alpha = res.best()
     return policies[p], alpha, res.stream_costs(p, 0), res
 

@@ -35,6 +35,7 @@ __all__ = [
     "SLOTS_PER_UNIT",
     "SpotMarket",
     "BidView",
+    "stacked_view_arrays",
     "truncated_exp_rate",
     "sample_truncated_exp",
 ]
@@ -136,6 +137,24 @@ class BidView:
     def t_for_H(self, target: np.ndarray) -> np.ndarray:
         """Earliest t with H(t) >= target; +inf if never within horizon."""
         return _invert_monotone(self.boundaries, self.H_cum, target)
+
+
+def stacked_view_arrays(prices, avail, slot: float, xp=np):
+    """(A_cum, C_cum) cumulative view arrays from per-slot prices + availability.
+
+    The traceable twin of ``SpotMarket.view``: ``prices``/``avail`` may carry
+    leading batch axes (``(..., n_slots)`` -> ``(..., n_slots + 1)``), and
+    ``xp=jax.numpy`` traces the same arithmetic into a jit program (the
+    scenario subsystem's on-device synthesis path). With ``xp=np`` on a 1-D
+    f64 row this is bit-identical to the per-bid view construction — the
+    host path stays the exact oracle by routing through this function.
+    """
+    step_a = xp.where(avail, slot, 0.0)
+    step_c = xp.where(avail, prices * slot, 0.0)
+    pad = xp.zeros(step_a.shape[:-1] + (1,), dtype=step_a.dtype)
+    A_cum = xp.concatenate([pad, xp.cumsum(step_a, axis=-1)], axis=-1)
+    C_cum = xp.concatenate([pad, xp.cumsum(step_c, axis=-1)], axis=-1)
+    return A_cum, C_cum
 
 
 def _invert_monotone(
@@ -250,14 +269,13 @@ class SpotMarket:
         key = round(float(bid), 12)
         if key not in self._views:
             avail = self.availability(bid)
-            step_a = np.where(avail, self.slot, 0.0)
-            step_c = np.where(avail, self.price * self.slot, 0.0)
+            A_cum, C_cum = stacked_view_arrays(self.price, avail, self.slot)
             view = BidView(
                 slot=self.slot,
                 avail=avail,
                 boundaries=self.boundaries,
-                A_cum=np.concatenate([[0.0], np.cumsum(step_a)]),
-                C_cum=np.concatenate([[0.0], np.cumsum(step_c)]),
+                A_cum=A_cum,
+                C_cum=C_cum,
             )
             view.__dict__["price"] = self.price
             self._views[key] = view

@@ -18,13 +18,26 @@ the float64 numpy oracle, ``"device"`` builds the plan tensors as one
 fused jit program whose outputs the jax/pallas cost kernels consume
 without a host staging copy. ``"auto"`` pairs the device plan with the
 jax/pallas eval backends and the host plan with numpy.
+
+The SCENARIO axis is a chunked stream (``scenarios.py``): ``scenarios``
+may be a materialized market (list) or a declarative ``ScenarioSpec`` /
+``ScenarioStream``, and ``scenario_chunk=K`` evaluates S >> host memory by
+synthesizing+consuming K scenarios per pass against ONE grid plan — the
+plan layer's dedup structure and the backends' compiled programs are
+reused across chunks, and no per-scenario Python object exists on the
+jax/pallas hot path (the spec synthesizes price paths on device).
+``evaluate_grid_chunks`` exposes the same stream one chunk at a time
+(the online-learning replay consumes it without ever materializing the
+full (S, J, P) tensor, and adaptive-adversary feedback happens between
+chunks).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
-from typing import Callable, Sequence
+from typing import Callable, Iterator, Sequence
 
 import numpy as np
 
@@ -33,13 +46,15 @@ from repro.core.scheduler import Policy
 from repro.core.types import ChainJob
 from repro.engine.plan import build_grid_plan
 from repro.engine.result import EngineResult
-from repro.engine.scenarios import check_scenarios
+from repro.engine.scenarios import as_source
 
-__all__ = ["evaluate_grid", "available_backends", "resolve_backend",
-           "resolve_plan_backend"]
+__all__ = ["evaluate_grid", "evaluate_grid_chunks", "GridChunk",
+           "available_backends", "resolve_backend", "resolve_plan_backend"]
 
 _BACKENDS = ("numpy", "jax", "pallas")
 _PLAN_BACKENDS = ("host", "device")
+_REDUCES = ("stack", "mean")
+_OUT_KEYS = ("spot_cost", "ondemand_cost", "spot_work", "ondemand_work")
 
 
 def available_backends() -> list[str]:
@@ -131,10 +146,149 @@ def resolve_plan_backend(plan_backend: str, backend: str,
     return plan_backend
 
 
+def _check_scenario_chunk(scenario_chunk) -> None:
+    """API-boundary validation of ``scenario_chunk`` (same care the
+    ``REPRO_ENGINE_BACKEND`` override got: fail HERE, naming the argument,
+    not deep in a backend with an opaque shape error)."""
+    if scenario_chunk is None:
+        return
+    if isinstance(scenario_chunk, bool) \
+            or not isinstance(scenario_chunk, (int, np.integer)):
+        raise ValueError(
+            f"scenario_chunk must be an int >= 1 or None "
+            f"(got {scenario_chunk!r})")
+    if scenario_chunk < 1:
+        raise ValueError(
+            f"scenario_chunk must be >= 1 (got {scenario_chunk}); pass "
+            f"None to evaluate all scenarios in one pass")
+
+
+def _prepare_stream(jobs, policies, scenarios, r_total, windows, selfowned,
+                    pool, availability, backend, plan_backend,
+                    scenario_chunk):
+    """Shared validation + plan build of the chunked evaluation paths.
+
+    Returns ``(source, gplan, backend, chunk, single)`` — the grid plan is
+    built ONCE and reused across every scenario chunk (it is
+    scenario-independent apart from the per-scenario availability case,
+    which requires a single full-batch chunk)."""
+    if not jobs:
+        raise ValueError("need at least one job")
+    policies = list(policies)
+    if not policies:
+        raise ValueError("need at least one policy")
+    single = isinstance(scenarios, SpotMarket)
+    source = as_source(scenarios)
+    S = source.n_scenarios
+    _check_scenario_chunk(scenario_chunk)
+    chunk = S if scenario_chunk is None else min(int(scenario_chunk), S)
+    if chunk < S and isinstance(availability, (list, tuple)):
+        raise ValueError(
+            "scenario_chunk cannot split a batch with per-scenario "
+            "availability queries (the plan's self-owned tensors are "
+            "indexed by the full scenario axis); evaluate in one chunk")
+
+    backend = resolve_backend(backend)
+    plan_backend = resolve_plan_backend(plan_backend, backend, pool)
+    gplan = build_grid_plan(
+        jobs, policies, r_total, windows=windows, selfowned=selfowned,
+        pool=pool, availability=availability,
+        slots_per_unit=source.slots_per_unit,
+        n_scenarios=S, plan_backend=plan_backend)
+    return source, gplan, backend, chunk, single
+
+
+def _dispatch(backend, gplan, batch, early_start, out, interpret) -> None:
+    if backend == "numpy":
+        from repro.engine import backend_numpy
+        backend_numpy.run(gplan, batch, early_start, out)
+    elif backend == "jax":
+        from repro.engine import backend_jax
+        backend_jax.run(gplan, batch, early_start, out)
+    else:
+        from repro.engine import backend_pallas
+        backend_pallas.run(gplan, batch, early_start, out,
+                           interpret=interpret)
+
+
+@dataclasses.dataclass
+class GridChunk:
+    """One scenario chunk of a streamed grid evaluation.
+
+    ``unit_cost[k]`` is the (J, P) cost matrix of GLOBAL scenario
+    ``s0 + k``; ``out`` carries the per-cell cost decomposition of the
+    chunk. The arrays are chunk-sized — a consumer that only folds them
+    (regret accumulation, scenario-mean reduction) never holds the full
+    (S, J, P) tensor.
+    """
+
+    s0: int
+    s1: int
+    unit_cost: np.ndarray          # (s1 - s0, J, P)
+    out: dict                      # per-cell cost decomposition, chunk-sized
+    workload: np.ndarray           # (J,)
+    timings: dict                  # {"synth": s, "eval": s}
+
+
+def evaluate_grid_chunks(
+    jobs: list[ChainJob],
+    policies: Sequence[Policy],
+    scenarios,
+    r_total: int = 0,
+    *,
+    scenario_chunk: int | None = None,
+    windows: str = "dealloc",
+    selfowned: str = "prop12",
+    early_start: bool = True,
+    pool: str = "dedicated",
+    availability: Callable | Sequence[Callable] | None = None,
+    backend: str = "auto",
+    plan_backend: str = "auto",
+    interpret: bool | None = None,
+) -> Iterator[GridChunk]:
+    """Stream the grid evaluation one scenario chunk at a time.
+
+    Same contract as :func:`evaluate_grid` (one grid plan, same backends,
+    same per-scenario results), but yields ``GridChunk`` objects instead of
+    assembling the (S, J, P) tensor — peak memory is chunk-sized. Between
+    ``next()`` calls the caller may invoke ``source.observe(...)`` on an
+    adaptive ``ScenarioStream``: the generator builds each chunk lazily
+    AFTER the previous one was consumed, which is exactly the chunk
+    boundary the adaptive adversary's feedback round-trip is defined at.
+
+    Validation (and the plan build) runs EAGERLY at the call, not at the
+    first ``next()`` — a bad ``scenario_chunk`` fails here, at the call
+    site it names.
+    """
+    source, gplan, backend, chunk, _ = _prepare_stream(
+        jobs, policies, scenarios, r_total, windows, selfowned, pool,
+        availability, backend, plan_backend, scenario_chunk)
+
+    def _iter():
+        J, P = gplan.n_jobs, gplan.n_policies
+        wl = np.maximum(gplan.workload, 1e-12)
+        for s0, s1, batch in source.chunks(chunk,
+                                           device=(backend != "numpy")):
+            t0 = time.perf_counter()
+            batch.prepare()
+            synth_t = time.perf_counter() - t0
+            out = {k: np.zeros((s1 - s0, J, P)) for k in _OUT_KEYS}
+            t0 = time.perf_counter()
+            _dispatch(backend, gplan, batch, early_start, out, interpret)
+            eval_t = time.perf_counter() - t0
+            unit = (out["spot_cost"] + out["ondemand_cost"]) \
+                / wl[None, :, None]
+            yield GridChunk(s0=s0, s1=s1, unit_cost=unit, out=out,
+                            workload=gplan.workload.copy(),
+                            timings={"synth": synth_t, "eval": eval_t})
+
+    return _iter()
+
+
 def evaluate_grid(
     jobs: list[ChainJob],
     policies: Sequence[Policy],
-    markets: SpotMarket | Sequence[SpotMarket],
+    scenarios,
     r_total: int = 0,
     *,
     windows: str = "dealloc",
@@ -145,61 +299,79 @@ def evaluate_grid(
     backend: str = "auto",
     plan_backend: str = "auto",
     interpret: bool | None = None,
+    scenario_chunk: int | None = None,
+    reduce: str = "stack",
 ) -> EngineResult:
     """Evaluate every job under every policy in every market scenario.
 
     Returns an ``EngineResult`` whose ``unit_cost[s]`` is the (J, P) TOLA
     cost matrix for scenario s; per-cell cost decompositions and per-policy
-    self-owned stats ride along. ``markets`` may be one ``SpotMarket`` or a
-    sequence of scenario markets sharing a slot grid (see
-    ``engine.scenarios``).
+    self-owned stats ride along. ``scenarios`` may be one ``SpotMarket``, a
+    sequence of scenario markets sharing a slot grid, or a declarative
+    ``ScenarioSpec`` / ``ScenarioStream`` (see ``engine.scenarios``) whose
+    price paths are synthesized on demand — on device for the jax/pallas
+    backends, with no per-scenario Python objects on the hot path.
+
+    ``scenario_chunk=K`` evaluates the scenario axis K scenarios per pass
+    against one shared grid plan (chunk results are bit-identical to the
+    monolithic pass — chunking changes memory, not arithmetic);
+    ``reduce="mean"`` folds the chunks into the scenario-mean cost tensor
+    (shape (1, J, P), ``n_scenarios_total`` keeps S) so peak host memory is
+    independent of S. ``timings["synth"]`` reports scenario-synthesis
+    seconds and ``timings["chunks"]`` the per-chunk split.
 
     ``pool`` selects the self-owned semantics: "dedicated" is the
     counterfactual evaluator (TOLA / Alg. 4 scoring, optionally against a
     realized ``availability`` query — one callable, or a list of S
     per-scenario callables for scenario-batched pool refinement, in which
-    case the self-owned stats gain a leading scenario axis), "shared"
-    replays the chronological shared-pool allocation per policy
-    (fixed-policy sweep semantics of ``run_jobs``). ``plan_backend``
-    selects where the plan tensors are built (see
+    case the self-owned stats gain a leading scenario axis and the batch
+    cannot be chunked), "shared" replays the chronological shared-pool
+    allocation per policy (fixed-policy sweep semantics of ``run_jobs``).
+    ``plan_backend`` selects where the plan tensors are built (see
     :func:`resolve_plan_backend`); ``timings["plan_device"]`` reports the
     device-build seconds (0.0 on the host plan path). ``interpret``
     forces/forbids pallas interpret mode (default: interpret off-TPU).
     """
-    if not jobs:
-        raise ValueError("need at least one job")
-    policies = list(policies)
-    if not policies:
-        raise ValueError("need at least one policy")
-    single = isinstance(markets, SpotMarket)
-    market_list = [markets] if single else list(markets)
-    if not market_list:
-        raise ValueError("need at least one market scenario")
-    check_scenarios(market_list)
+    if reduce not in _REDUCES:
+        raise ValueError(f"unknown reduce {reduce!r}; pick from {_REDUCES}")
+    if reduce == "mean" and isinstance(availability, (list, tuple)):
+        raise ValueError("reduce='mean' cannot fold per-scenario "
+                         "availability results; use reduce='stack'")
+    source, gplan, backend, chunk, single = _prepare_stream(
+        jobs, policies, scenarios, r_total, windows, selfowned, pool,
+        availability, backend, plan_backend, scenario_chunk)
+    S, J, P = source.n_scenarios, gplan.n_jobs, gplan.n_policies
 
-    backend = resolve_backend(backend)
-    plan_backend = resolve_plan_backend(plan_backend, backend, pool)
-    gplan = build_grid_plan(
-        jobs, policies, r_total, windows=windows, selfowned=selfowned,
-        pool=pool, availability=availability,
-        slots_per_unit=market_list[0].slots_per_unit,
-        n_scenarios=len(market_list), plan_backend=plan_backend)
-
-    S, J, P = len(market_list), gplan.n_jobs, gplan.n_policies
-    out = {k: np.zeros((S, J, P)) for k in
-           ("spot_cost", "ondemand_cost", "spot_work", "ondemand_work")}
-    t0 = time.perf_counter()
-    if backend == "numpy":
-        from repro.engine import backend_numpy
-        backend_numpy.run(gplan, market_list, early_start, out)
-    elif backend == "jax":
-        from repro.engine import backend_jax
-        backend_jax.run(gplan, market_list, early_start, out)
+    if reduce == "stack":
+        out = {k: np.zeros((S, J, P)) for k in _OUT_KEYS}
     else:
-        from repro.engine import backend_pallas
-        backend_pallas.run(gplan, market_list, early_start, out,
-                           interpret=interpret)
-    eval_seconds = time.perf_counter() - t0
+        acc = {k: np.zeros((J, P)) for k in _OUT_KEYS}
+        buf = {k: np.zeros((chunk, J, P)) for k in _OUT_KEYS}
+    chunk_timings: list[dict] = []
+    synth_total = eval_total = 0.0
+    # Mirrors evaluate_grid_chunks' loop ON PURPOSE: the stack path writes
+    # backend output straight into the (S, J, P) slices — layering on
+    # GridChunk would pay a full extra tensor copy per chunk.
+    for s0, s1, batch in source.chunks(chunk, device=(backend != "numpy")):
+        t0 = time.perf_counter()
+        batch.prepare()
+        synth_t = time.perf_counter() - t0
+        if reduce == "stack":
+            out_chunk = {k: v[s0:s1] for k, v in out.items()}
+        else:
+            out_chunk = {k: v[:s1 - s0] for k, v in buf.items()}
+        t0 = time.perf_counter()
+        _dispatch(backend, gplan, batch, early_start, out_chunk, interpret)
+        eval_t = time.perf_counter() - t0
+        if reduce == "mean":
+            for k in _OUT_KEYS:
+                acc[k] += out_chunk[k].sum(axis=0)
+        synth_total += synth_t
+        eval_total += eval_t
+        chunk_timings.append({"scenarios": [s0, s1], "synth": synth_t,
+                              "eval": eval_t})
+    if reduce == "mean":
+        out = {k: v[None] / S for k, v in acc.items()}
 
     per_scenario = gplan.per_scenario
     so_shape = (S, J, P) if per_scenario else (J, P)
@@ -225,13 +397,15 @@ def evaluate_grid(
         selfowned_work=selfowned_work,
         selfowned_reserved=selfowned_reserved,
         backend=backend,
-        single_market=single,
+        single_market=single and reduce == "stack",
+        n_scenarios_total=S,
         # plan_device: the jit plan-build seconds alone — on the staged
         # device path the pool phase is dominated by HOST work (the
         # availability-query callables), which must not masquerade as
         # device-build time.
         timings={"plan": gplan.plan_seconds, "pool": gplan.pool_seconds,
-                 "eval": eval_seconds,
+                 "eval": eval_total, "synth": synth_total,
+                 "chunks": chunk_timings,
                  "plan_device": (gplan.plan_seconds
                                  if gplan.device else 0.0)},
     )

@@ -30,7 +30,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine.plan import concat_rows, scenario_cat
-from repro.engine.scenarios import stack_views
 from repro.kernels.ref import chain_costs_ref, policy_cost_ref
 
 __all__ = ["run"]
@@ -76,17 +75,20 @@ def _task_batch_ps(A, C, starts, ends, z_t, d_eff, p_od, slot):
     return fn(A, C, z_t, d_eff)
 
 
-def run(gplan, markets, early_start: bool, out) -> None:
-    slot = markets[0].slot
-    p_od = markets[0].p_ondemand
+def run(gplan, batch, early_start: bool, out) -> None:
+    slot = batch.slot
+    p_od = batch.p_ondemand
     J = gplan.n_jobs
-    S = len(markets)
+    S = batch.n_scenarios
     ps = gplan.per_scenario
     f32 = lambda a: jnp.asarray(a, jnp.float32)
 
     for bid in gplan.bids:
         groups = gplan.groups_for_bid(bid)
-        A, C = stack_views(markets, bid)        # (S, n_slots+1)
+        # (S, n_slots+1) stacked views, cached on the batch per bid —
+        # already-f32 device tensors when the chunk was synthesized on
+        # device (a spec source), host f64 otherwise.
+        A, C = batch.stacked(bid)
         A, C = f32(A), f32(C)
         ends = concat_rows([g.plan.ends for g in groups])
         if ps:
@@ -119,9 +121,9 @@ def run(gplan, markets, early_start: bool, out) -> None:
                     A, C, f32(starts.ravel()), f32(ends.ravel()),
                     f32(z_t.reshape(R * L)), f32(d_eff.reshape(R * L)),
                     p_od, slot)
-            res = {k: v.reshape(len(markets), R, L).sum(axis=2)
+            res = {k: v.reshape(S, R, L).sum(axis=2)
                    for k, v in res.items() if k != "finish"}
-        shape = (len(markets), len(groups), J)
+        shape = (S, len(groups), J)
         for key in ("spot_cost", "ondemand_cost", "spot_work",
                     "ondemand_work"):
             vals = np.asarray(res[key], np.float64).reshape(shape)

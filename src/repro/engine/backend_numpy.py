@@ -16,13 +16,19 @@ from repro.core.simulate import simulate_chains_early, simulate_tasks
 __all__ = ["run"]
 
 
-def run(gplan, markets, early_start: bool, out) -> None:
-    """Fill the (S, J, P) arrays in ``out`` for every scenario and group."""
+def run(gplan, batch, early_start: bool, out) -> None:
+    """Fill the (S, J, P) arrays in ``out`` for every scenario and group.
+
+    ``batch`` is a ``ScenarioBatch`` (one chunk of the scenario stream);
+    the oracle consumes its materialized ``markets`` — for a spec chunk
+    these are lazily wrapped from the f64 oracle prices, bit-exact with the
+    fully materialized list path.
+    """
     if getattr(gplan, "device", False):
         raise ValueError(
             "the numpy oracle backend requires a host (float64) grid plan; "
             "build it with plan_backend='host'")
-    for s, market in enumerate(markets):
+    for s, market in enumerate(batch.markets):
         for g in gplan.groups:
             view = market.view(float(g.bid))
             plan = g.plan

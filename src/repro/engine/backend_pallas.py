@@ -17,12 +17,11 @@ from __future__ import annotations
 import numpy as np
 
 from repro.engine.plan import concat_rows, scenario_cat
-from repro.engine.scenarios import stack_views
 
 __all__ = ["run"]
 
 
-def run(gplan, markets, early_start: bool, out, interpret: bool | None = None,
+def run(gplan, batch, early_start: bool, out, interpret: bool | None = None,
         block_rows: int = 128) -> None:
     import jax
     import jax.numpy as jnp
@@ -31,10 +30,10 @@ def run(gplan, markets, early_start: bool, out, interpret: bool | None = None,
 
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    slot = markets[0].slot
-    p_od = markets[0].p_ondemand
+    slot = batch.slot
+    p_od = batch.p_ondemand
     J = gplan.n_jobs
-    S = len(markets)
+    S = batch.n_scenarios
     L = gplan.L
     bids = gplan.bids
     groups_per_bid = [gplan.groups_for_bid(b) for b in bids]
@@ -46,13 +45,22 @@ def run(gplan, markets, early_start: bool, out, interpret: bool | None = None,
         B = len(bids)
         per_scenario = gplan.per_scenario
         R_max = max(len(gs) for gs in groups_per_bid) * J
-        A = np.zeros((B, S, markets[0].n_slots + 1), np.float32)
-        C = np.zeros_like(A)
         arrival = np.zeros((B, R_max))
-        for bi, (bid, groups) in enumerate(zip(bids, groups_per_bid)):
-            A[bi], C[bi] = stack_views(markets, bid)
+        for bi, groups in enumerate(groups_per_bid):
             arrival[bi, :len(groups) * J] = np.tile(gplan.arrival,
                                                     len(groups))
+        if batch.device:
+            # Device-synthesized chunk: the per-bid views are already f32
+            # jax arrays — stack them with jnp so the kernel consumes them
+            # without a host round trip.
+            AC = [batch.stacked(bid) for bid in bids]
+            A = jnp.stack([a for a, _ in AC])
+            C = jnp.stack([c for _, c in AC])
+        else:
+            A = np.zeros((B, S, batch.n_slots + 1), np.float32)
+            C = np.zeros_like(A)
+            for bi, bid in enumerate(bids):
+                A[bi], C[bi] = batch.stacked(bid)
         if gplan.device:
             # Device grid plan: build the zero-padded (B, ..., R_max, L)
             # stacks with jnp so the plan tensors feed the kernel without a
@@ -113,7 +121,7 @@ def run(gplan, markets, early_start: bool, out, interpret: bool | None = None,
         return
 
     for bid, groups in zip(bids, groups_per_bid):
-        A, C = stack_views(markets, bid)        # (S, n_slots+1)
+        A, C = batch.stacked(bid)               # (S, n_slots+1)
         starts = concat_rows([g.plan.starts for g in groups])
         ends = concat_rows([g.plan.ends for g in groups])
         R, L = ends.shape

@@ -32,10 +32,15 @@ class EngineResult:
     selfowned_reserved: np.ndarray  # availability queries
     backend: str = "numpy"
     single_market: bool = False    # True when the caller passed one market
+    # Scenarios EVALUATED — differs from the leading axis length only under
+    # reduce="mean", where the arrays hold the scenario-mean (axis 1).
+    n_scenarios_total: int | None = None
     # Phase wall seconds: "plan" (window tensors), "pool" (self-owned +
     # residuals; host availability queries on the staged device path),
-    # "eval" (backend market realization), "plan_device" (seconds the plan
-    # tensors were built on device — 0.0 on the host plan path).
+    # "eval" (backend market realization, summed over scenario chunks),
+    # "synth" (scenario price-path synthesis/materialization, summed),
+    # "plan_device" (seconds the plan tensors were built on device — 0.0 on
+    # the host plan path), "chunks" (the per-chunk synth/eval split).
     timings: dict | None = None
 
     @property

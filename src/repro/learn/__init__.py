@@ -27,16 +27,18 @@ from repro.learn.learners import (
     Schedule,
     as_spec,
 )
-from repro.learn.regret import LearnResult, prop_b1_bound
+from repro.learn.regret import LearnResult, StreamLearnResult, prop_b1_bound
 from repro.learn.replay import (
     available_backends,
     build_events,
     replay,
+    replay_stream,
     resolve_backend,
 )
 
 __all__ = [
     "LEARNER_KINDS", "FULL_INFO_KINDS", "LearnerSpec", "Schedule", "as_spec",
-    "LearnResult", "prop_b1_bound",
-    "replay", "build_events", "available_backends", "resolve_backend",
+    "LearnResult", "StreamLearnResult", "prop_b1_bound",
+    "replay", "replay_stream", "build_events", "available_backends",
+    "resolve_backend",
 ]

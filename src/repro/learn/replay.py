@@ -42,9 +42,10 @@ from repro.learn.learners import (
     sample_probs,
     update_state,
 )
-from repro.learn.regret import LearnResult
+from repro.learn.regret import LearnResult, StreamLearnResult
 
-__all__ = ["replay", "build_events", "available_backends", "resolve_backend"]
+__all__ = ["replay", "replay_stream", "build_events", "available_backends",
+           "resolve_backend"]
 
 
 def available_backends() -> list[str]:
@@ -294,3 +295,71 @@ def replay(
         weights=weights, unit_cost=np.asarray(C, dtype=np.float64),
         arrivals=arrivals, workload=Z,
         feedback_delay=float(d), backend=backend)
+
+
+def replay_stream(
+    jobs,
+    policies,
+    scenarios,
+    r_total: int = 0,
+    *,
+    learners=("hedge",),
+    seed: int = 0,
+    scenario_chunk: int | None = None,
+    backend: str = "auto",
+    engine_backend: str = "auto",
+    windows: str = "dealloc",
+    selfowned: str = "prop12",
+    early_start: bool = True,
+    interpret: bool | None = None,
+) -> StreamLearnResult:
+    """Regret curves straight from a scenario stream — no (S, J, P) tensor.
+
+    The engine evaluates ``scenario_chunk`` scenarios per pass
+    (``evaluate_grid_chunks`` — one shared grid plan, device-synthesized
+    price paths for the jax/pallas engine backends, no per-scenario Python
+    market objects on the hot path), each chunk's counterfactual cost
+    tensor is replayed by every learner in ``learners`` (scenario s keeps
+    replay seed ``seed + s``, so the sampled traces are identical to a
+    monolithic ``replay`` over the materialized tensor), and the per-chunk
+    ``LearnResult`` is folded into a ``StreamLearnResult`` — running at
+    S = 10^4-10^5 scenarios with chunk-sized peak memory.
+
+    When ``scenarios`` is an adaptive ``ScenarioSpec`` / ``ScenarioStream``
+    the chunk's realized regret of ``learners[0]`` is fed back through
+    ``ScenarioStream.observe`` BEFORE the next chunk is synthesized: the
+    adversary watches the learner at chunk boundaries and concentrates its
+    spikes on the most harmful period (the ROADMAP adaptive-adversary
+    round trip).
+    """
+    from repro.engine.api import evaluate_grid_chunks
+    from repro.engine.scenarios import as_source
+
+    if not jobs:
+        raise ValueError("need jobs")
+    arrivals = np.array([j.arrival for j in jobs])
+    if np.any(np.diff(arrivals) < -1e-9):
+        raise ValueError("jobs must be arrival-ordered")
+    d = max(j.deadline - j.arrival for j in jobs)
+    Z = np.array([j.total_work for j in jobs])
+    specs = [as_spec(l) for l in learners]
+    if not specs:
+        raise ValueError("need at least one learner")
+    backend = resolve_backend(backend)
+
+    source = as_source(scenarios)
+    acc = StreamLearnResult(specs=specs, feedback_delay=float(d),
+                            backend=backend)
+    for ch in evaluate_grid_chunks(
+            jobs, policies, source, r_total,
+            scenario_chunk=scenario_chunk, windows=windows,
+            selfowned=selfowned, early_start=early_start, pool="dedicated",
+            backend=engine_backend, interpret=interpret):
+        lr = replay(ch.unit_cost, arrivals, d, workload=Z, learners=specs,
+                    seed=seed + ch.s0, backend=backend, interpret=interpret)
+        feedback = acc.fold(lr)
+        # The chunk-boundary round trip: a no-op for every non-adaptive
+        # source; the generator builds the NEXT chunk only after this
+        # returns, so the adversary's state is current when spikes land.
+        source.observe(feedback)
+    return acc
