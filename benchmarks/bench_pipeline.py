@@ -25,6 +25,17 @@ Scenario legs (the stream side of the pipeline):
   evaluation against one shared grid plan), gated in CI with the same
   2x per-cell regression rule as the other legs; its cost tensor is
   cross-checked against the numpy oracle on the SAME spec.
+* ``jax+shard`` / ``jax+shard+overlap`` — the spec-stream workload with
+  the scenario axis sharded over a device mesh (DESIGN.md §9; ``--mesh``
+  shards, default every visible device), without and with double-buffered
+  chunk synthesis; both cross-checked against the same numpy spec oracle.
+  The ``shard_scaling`` sweep then streams regret curves through
+  ``replay_stream`` at geometrically growing S (up to
+  ``--shard-scale-max``) on a reduced grid — peak memory stays
+  chunk-sized no matter how large S grows, which is the point.
+
+``--only {plan,e2e,stream,synth,shard}`` runs a subset of those sections
+(default: all).
 
 Emits ``BENCH_pipeline.json``:
 
@@ -33,7 +44,10 @@ Emits ``BENCH_pipeline.json``:
         [--backends numpy jax] [--out BENCH_pipeline.json]
 
 Off-TPU the pallas backend runs in interpret mode — kernel-logic timing,
-not TPU speed (tagged in the output; compare numpy vs jax there).
+not TPU speed (tagged in the output; compare numpy vs jax there). The
+shard legs on a 1-device box are the degenerate mesh — run CI-style with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 to exercise real
+sharding on CPU.
 """
 
 from __future__ import annotations
@@ -106,11 +120,20 @@ def _synth_sweep(horizon: float, n_scenarios: int, sweep_max: int,
     return {"kind": "fresh", "sweep": sweep}
 
 
+SECTIONS = ("plan", "e2e", "stream", "synth", "shard")
+
+
 def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
         backends: list[str], seed: int = 0, job_type: int = 2,
-        iters: int = 3, scenario_sweep_max: int = 4096) -> dict:
+        iters: int = 3, scenario_sweep_max: int = 4096,
+        sections=None, mesh: int | None = None,
+        shard_scale_max: int = 65536) -> dict:
     if iters < 1:
         raise ValueError("need --iters >= 1 (one timed pass after warmup)")
+    sections = SECTIONS if sections is None else tuple(sections)
+    for s in sections:
+        if s not in SECTIONS:
+            raise ValueError(f"unknown section {s!r}; pick from {SECTIONS}")
     jobs = generate_chain_jobs(n_jobs, job_type, seed=seed)
     horizon = max(j.deadline for j in jobs) + 1.0
     markets = make_scenarios(horizon, n_scenarios, seed=seed + 1000)
@@ -122,11 +145,6 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
     # --- plan phase: batched builder vs the legacy per-group loop --------
     xs = list(distinct_window_params(grid, r_total).values())
 
-    t_loop = _best_of(
-        lambda: [build_plans(jobs, Policy(beta=x, bid=0.0), r_total)
-                 for x in xs], iters)
-    t_batch = _best_of(lambda: build_plans_batch(jobs, xs), iters)
-
     out = {
         "n_jobs": n_jobs,
         "n_policies": len(grid),
@@ -136,9 +154,6 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
         "seed": seed,
         "cells": cells,
         "window_groups": len(xs),
-        "plan_loop_seconds": t_loop,
-        "plan_batch_seconds": t_batch,
-        "plan_batch_speedup": t_loop / t_batch,
         "backends": {},
     }
     try:
@@ -146,8 +161,17 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
         out["jax_backend"] = jax.default_backend()
     except Exception:
         out["jax_backend"] = None
-    print(f"[plan  ] loop {t_loop:7.3f}s  batch {t_batch:7.3f}s  "
-          f"({out['plan_batch_speedup']:.1f}x, {len(xs)} window groups)")
+
+    if "plan" in sections:
+        t_loop = _best_of(
+            lambda: [build_plans(jobs, Policy(beta=x, bid=0.0), r_total)
+                     for x in xs], iters)
+        t_batch = _best_of(lambda: build_plans_batch(jobs, xs), iters)
+        out["plan_loop_seconds"] = t_loop
+        out["plan_batch_seconds"] = t_batch
+        out["plan_batch_speedup"] = t_loop / t_batch
+        print(f"[plan  ] loop {t_loop:7.3f}s  batch {t_batch:7.3f}s  "
+              f"({out['plan_batch_speedup']:.1f}x, {len(xs)} window groups)")
 
     # --- end-to-end jobs -> cost tensor, per (backend, plan-backend) -----
     # Host-plan legs keep the bare backend key (the CI regression gate
@@ -156,6 +180,8 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
     # on device ("<backend>+device-plan").
     legs = [(b, "host") for b in backends]
     legs += [(b, "device") for b in backends if b != "numpy"]
+    if "e2e" not in sections:
+        legs = []
     ref = None
     for backend, plan_backend in legs:
         name = backend if plan_backend == "host" \
@@ -209,17 +235,20 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
     # SAME spec (the list-path ref above realizes different prices).
     spec = ScenarioSpec("fresh", horizon, n_scenarios, seed=seed + 1000)
     chunk = max(1, n_scenarios // 2)
-    spec_ref = evaluate_grid(jobs, grid, spec, r_total,
-                             backend="numpy").unit_cost
-    for backend in [b for b in backends if b != "numpy"]:
-        name = f"{backend}+spec-stream"
+    spec_ref = None
+    if "stream" in sections or "shard" in sections:
+        spec_ref = evaluate_grid(jobs, grid, spec, r_total,
+                                 backend="numpy").unit_cost
+
+    def stream_leg(name, backend, smesh=None, overlap=None):
         res = None
         best = np.inf
         phases = None
         for it in range(iters + 1):
             t0 = time.perf_counter()
             res = evaluate_grid(jobs, grid, spec, r_total, backend=backend,
-                                scenario_chunk=chunk)
+                                scenario_chunk=chunk, mesh=smesh,
+                                overlap=overlap)
             dt = time.perf_counter() - t0
             if it == 0:
                 warmup = dt
@@ -236,24 +265,99 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
             "plan_device_seconds": phases["plan_device"],
             "scenario_chunk": chunk,
             "n_chunks": len(phases["chunks"]),
+            "overlap": bool(phases["overlap"]),
             "interpret": backend == "pallas"
             and out["jax_backend"] == "cpu",
             "max_abs_diff_vs_numpy_spec": float(
                 np.abs(res.unit_cost - spec_ref).max()),
         }
+        if smesh is not None:
+            entry["mesh_shards"] = smesh.n_shards
         if entry["interpret"]:
             entry["note"] = ("pallas kernels ran in INTERPRET mode on CPU — "
                              "kernel-logic timing, NOT TPU speed; do not "
                              "compare against the numpy/jax entries")
         out["backends"][name] = entry
-        print(f"[{name:16s}] {best:7.3f}s end-to-end  "
+        print(f"[{name:17s}] {best:7.3f}s end-to-end  "
               f"(plan {phases['plan']:.3f}  synth {phases['synth']:.3f}  "
               f"eval {phases['eval']:.3f}, {len(phases['chunks'])} chunks)  "
               f"{cells / best / 1e3:9.1f}k cells/s")
+        return entry
 
-    out["scenario_synthesis"] = _synth_sweep(horizon, n_scenarios,
-                                             scenario_sweep_max, seed, iters)
+    if "stream" in sections:
+        for backend in [b for b in backends if b != "numpy"]:
+            stream_leg(f"{backend}+spec-stream", backend)
+
+    if "synth" in sections:
+        out["scenario_synthesis"] = _synth_sweep(
+            horizon, n_scenarios, scenario_sweep_max, seed, iters)
+
+    if "shard" in sections:
+        if out["jax_backend"] is None or "jax" not in backends:
+            print("[shard  ] skipped (needs jax and the jax backend)")
+        else:
+            _shard_section(out, jobs, grid, stream_leg, mesh,
+                           shard_scale_max, r_total, horizon, seed,
+                           job_type)
     return out
+
+
+def _shard_section(out, jobs, grid, stream_leg, mesh, shard_scale_max,
+                   r_total, horizon, seed, job_type):
+    """Sharded spec-stream legs + the replay_stream scenario-scaling sweep.
+
+    The sweep runs on a REDUCED grid (its point is the scenario axis, not
+    the cell count): regret statistics for S up to ``shard_scale_max``
+    scenarios streamed ``chunk`` at a time through the sharded engine +
+    sharded fold — wall clock grows linearly in S while peak memory stays
+    pinned at one chunk.
+    """
+    from repro.engine import ScenarioMesh
+    from repro.engine.mesh import as_scenario_mesh
+    from repro.learn import replay_stream
+
+    smesh = as_scenario_mesh(mesh)
+    if smesh is None:
+        smesh = ScenarioMesh.create()
+    plain = stream_leg("jax+shard", "jax", smesh=smesh, overlap=False)
+    over = stream_leg("jax+shard+overlap", "jax", smesh=smesh, overlap=True)
+    # The overlap win: residual synth wait once chunk k+1 is dispatched
+    # before chunk k's eval blocks (see EngineResult.timings "overlap").
+    over["overlap_synth_win_seconds"] = (plain["synth_seconds"]
+                                         - over["synth_seconds"])
+
+    chunk = 8192
+    sw_jobs = generate_chain_jobs(16, job_type, seed=seed)
+    sw_horizon = max(j.deadline for j in sw_jobs) + 1.0
+    sw_grid = grid[:4]
+    sweep = []
+    S = chunk
+    while S <= shard_scale_max:
+        spec = ScenarioSpec("fresh", sw_horizon, S, seed=seed + 1)
+        t0 = time.perf_counter()
+        slr = replay_stream(sw_jobs, sw_grid, spec, r_total,
+                            learners=["hedge"], seed=seed,
+                            scenario_chunk=chunk, backend="jax",
+                            engine_backend="jax", mesh=smesh, overlap=True)
+        dt = time.perf_counter() - t0
+        sweep.append({
+            "S": S, "seconds": dt, "scenarios_per_sec": S / dt,
+            "n_chunks": slr.n_chunks,
+            "regret": float(slr.regret_per_job()[0]),
+            "regret_std": float(slr.regret_std()[0]),
+        })
+        print(f"[shard scale S={S:8d}] {dt:8.2f}s  "
+              f"{S / dt:8.0f} scenarios/s  {slr.n_chunks:4d} chunks  "
+              f"regret {sweep[-1]['regret']:.4f} "
+              f"+- {sweep[-1]['regret_std']:.4f}")
+        if S >= shard_scale_max:
+            break
+        S = min(S * 4, shard_scale_max)  # always land on the cap itself
+    out["shard_scaling"] = {
+        "mesh_shards": smesh.n_shards, "scenario_chunk": chunk,
+        "n_jobs": len(sw_jobs), "n_policies": len(sw_grid),
+        "sweep": sweep,
+    }
 
 
 def main(argv=None):
@@ -269,11 +373,21 @@ def main(argv=None):
                    choices=["numpy", "jax", "pallas"])
     p.add_argument("--scenario-sweep-max", type=int, default=4096,
                    help="largest S of the scenario-synthesis sweep")
+    p.add_argument("--only", nargs="+", default=None, choices=SECTIONS,
+                   help="run a subset of the benchmark sections")
+    p.add_argument("--mesh", type=int, default=None,
+                   help="shard count of the jax+shard legs (default: every "
+                        "visible device; clamped with a warning)")
+    p.add_argument("--shard-scale-max", type=int, default=65536,
+                   help="largest S of the sharded replay_stream scaling "
+                        "sweep (the committed baseline uses 1048576)")
     p.add_argument("--out", default="BENCH_pipeline.json")
     args = p.parse_args(argv)
     res = run(args.jobs, args.policies, args.scenarios, args.r,
               args.backends, seed=args.seed, job_type=args.job_type,
-              iters=args.iters, scenario_sweep_max=args.scenario_sweep_max)
+              iters=args.iters, scenario_sweep_max=args.scenario_sweep_max,
+              sections=args.only, mesh=args.mesh,
+              shard_scale_max=args.shard_scale_max)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"wrote {args.out}")

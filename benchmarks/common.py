@@ -23,13 +23,15 @@ __all__ = ["Setup", "make_setup", "sweep_min", "greedy_min",
 
 class Setup:
     def __init__(self, jobs, scenarios, job_type: int, seed: int,
-                 backend: str = "auto", scenario_chunk: int | None = None):
+                 backend: str = "auto", scenario_chunk: int | None = None,
+                 mesh=None):
         self.jobs = jobs
         self.scenarios = scenarios      # ScenarioSource | ScenarioSpec
         self.job_type = job_type
         self.seed = seed
         self.backend = backend
         self.scenario_chunk = scenario_chunk
+        self.mesh = mesh                # ScenarioMesh | int | None
         self._source = as_source(scenarios)
 
     @property
@@ -51,7 +53,7 @@ class Setup:
 def make_setup(n_jobs: int, job_type: int, seed: int = 0,
                scenarios: int = 1, scenario_kind: str = "fresh",
                backend: str = "auto",
-               scenario_chunk: int | None = None) -> Setup:
+               scenario_chunk: int | None = None, mesh=None) -> Setup:
     """Job stream + S market scenarios (S=1 reproduces the paper setup).
 
     Without ``scenario_chunk`` the scenarios are the legacy materialized
@@ -60,7 +62,9 @@ def make_setup(n_jobs: int, job_type: int, seed: int = 0,
     through the engine ``scenario_chunk`` scenarios per pass — synthesized
     on device for the jax/pallas backends, S bounded by wall clock rather
     than host memory (``adaptive`` requires this path: it needs the
-    stream's chunk-boundary feedback).
+    stream's chunk-boundary feedback). ``mesh`` (an int shard count from
+    ``--mesh``, clamped to visible devices with a warning) shards the
+    scenario axis across a device mesh (DESIGN.md §9; jax backend only).
     """
     jobs = generate_chain_jobs(n_jobs, job_type, seed=seed)
     horizon = max(j.deadline for j in jobs) + 1.0
@@ -75,7 +79,7 @@ def make_setup(n_jobs: int, job_type: int, seed: int = 0,
         scn = make_scenarios(horizon, max(scenarios, 1), seed=seed + 1000,
                              kind=scenario_kind)
     return Setup(jobs, scn, job_type, seed, backend,
-                 scenario_chunk=scenario_chunk)
+                 scenario_chunk=scenario_chunk, mesh=mesh)
 
 
 def sweep_min(setup: Setup, policies: list[Policy], **kwargs):
@@ -91,6 +95,7 @@ def sweep_min(setup: Setup, policies: list[Policy], **kwargs):
     """
     kwargs.setdefault("backend", setup.backend)
     kwargs.setdefault("scenario_chunk", setup.scenario_chunk)
+    kwargs.setdefault("mesh", setup.mesh)
     pol, alpha, costs, _ = sweep_policies(setup.jobs, policies,
                                           setup._source, **kwargs)
     return pol, alpha, costs
@@ -131,6 +136,11 @@ def argparser(desc: str) -> argparse.ArgumentParser:
     p.add_argument("--backend", default="auto",
                    choices=["auto", "numpy", "jax", "pallas"],
                    help="evaluation-engine backend")
+    p.add_argument("--mesh", type=int, default=None,
+                   help="shard the scenario axis over an N-way device mesh "
+                        "(jax backend; clamped to visible devices with a "
+                        "warning — force N CPU devices with XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=N)")
     return p
 
 

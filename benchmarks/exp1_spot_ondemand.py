@@ -24,13 +24,13 @@ from repro.core import B_BIDS, spot_od_policies
 
 def run(n_jobs: int, types: list[int], seed: int = 0, scenarios: int = 1,
         scenario_kind: str = "fresh", backend: str = "auto",
-        scenario_chunk: int | None = None) -> dict:
+        scenario_chunk: int | None = None, mesh: int | None = None) -> dict:
     out = {}
     for jt in types:
         with Timer(f"exp1 type {jt}"):
             s = make_setup(n_jobs, jt, seed, scenarios=scenarios,
                            scenario_kind=scenario_kind, backend=backend,
-                           scenario_chunk=scenario_chunk)
+                           scenario_chunk=scenario_chunk, mesh=mesh)
             pol, alpha, _ = sweep_min(s, spot_od_policies(), early_start=True)
             greedy = greedy_min(s, B_BIDS)
             even_planned = sweep_min(
@@ -50,7 +50,8 @@ def run(n_jobs: int, types: list[int], seed: int = 0, scenarios: int = 1,
 def main(argv=None):
     args = argparser(__doc__).parse_args(argv)
     res = run(args.jobs, args.types, args.seed, args.scenarios,
-              args.scenario_kind, args.backend, args.scenario_chunk)
+              args.scenario_kind, args.backend, args.scenario_chunk,
+              args.mesh)
     rows = [[jt, f"{r['alpha']:.4f}", r["best_policy"],
              f"{r['rho_vs_greedy']:.2%}", f"{r['rho_vs_even']:.2%}",
              f"{r['rho_vs_even_early']:.2%}"] for jt, r in res.items()]

@@ -26,12 +26,13 @@ def _best(setup, r, selfowned):
 
 def run(n_jobs: int, types: list[int], rs: list[int], seed: int = 0,
         scenarios: int = 1, scenario_kind: str = "fresh",
-        backend: str = "auto", scenario_chunk: int | None = None) -> dict:
+        backend: str = "auto", scenario_chunk: int | None = None,
+        mesh: int | None = None) -> dict:
     out = {}
     for jt in types:
         s = make_setup(n_jobs, jt, seed, scenarios=scenarios,
                        scenario_kind=scenario_kind, backend=backend,
-                       scenario_chunk=scenario_chunk)
+                       scenario_chunk=scenario_chunk, mesh=mesh)
         horizon = max(j.deadline for j in s.jobs)
         for r in rs:
             with Timer(f"exp3 type {jt} r={r}"):
@@ -51,7 +52,8 @@ def run(n_jobs: int, types: list[int], rs: list[int], seed: int = 0,
 def main(argv=None):
     args = argparser(__doc__).parse_args(argv)
     res = run(args.jobs, args.types, args.r, args.seed, args.scenarios,
-              args.scenario_kind, args.backend, args.scenario_chunk)
+              args.scenario_kind, args.backend, args.scenario_chunk,
+              args.mesh)
     rows = [[r, jt, f"{v['alpha_prop']:.4f}", f"{v['alpha_naive']:.4f}",
              f"{v['rho']:.2%}", f"{v['mu']:.4f}"]
             for (r, jt), v in sorted(res.items())]

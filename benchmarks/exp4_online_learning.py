@@ -47,14 +47,15 @@ def run(n_jobs: int, rs: list[int], seed: int = 0, job_type: int = 2,
         scenarios: int = 1, scenario_kind: str = "fresh",
         backend: str = "auto", learners: list[str] | None = None,
         eta_grid: list[float] | None = None,
-        scenario_chunk: int | None = None) -> dict:
+        scenario_chunk: int | None = None,
+        mesh: int | None = None) -> dict:
     learners = learners or ["hedge"]
     eta_grid = eta_grid or []
     compare = len(learners) > 1 or eta_grid
     out = {}
     s = make_setup(n_jobs, job_type, seed, scenarios=scenarios,
                    scenario_kind=scenario_kind, backend=backend,
-                   scenario_chunk=scenario_chunk)
+                   scenario_chunk=scenario_chunk, mesh=mesh)
     arrivals = np.array([j.arrival for j in s.jobs])
     d = max(j.deadline - j.arrival for j in s.jobs)
     Z = np.array([j.total_work for j in s.jobs])
@@ -65,11 +66,12 @@ def run(n_jobs: int, rs: list[int], seed: int = 0, job_type: int = 2,
             # engine pass; the sequential replay runs per scenario.
             props = run_tola_scenarios(
                 s.jobs, grid, s.markets, r_total=r, seed=seed,
-                early_start=True, backend=backend, learner=learners[0])
+                early_start=True, backend=backend, learner=learners[0],
+                mesh=mesh)
             benches = run_tola_scenarios(
                 s.jobs, benchmark_bid_policies(), s.markets, r_total=r,
                 windows="even", selfowned="naive", early_start=False,
-                seed=seed, backend=backend, learner=learners[0])
+                seed=seed, backend=backend, learner=learners[0], mesh=mesh)
             a_prop = np.array([p.average_unit_cost() for p in props])
             a_bench = np.array([b.average_unit_cost() for b in benches])
             out[r] = {
@@ -106,7 +108,7 @@ def run(n_jobs: int, rs: list[int], seed: int = 0, job_type: int = 2,
                     s.jobs, grid, stream, r_total=r,
                     learners=comparison_specs(learners, eta_grid),
                     seed=seed, scenario_chunk=scenario_chunk,
-                    backend="auto", engine_backend=backend)
+                    backend="auto", engine_backend=backend, mesh=mesh)
                 out[r]["stream"] = slr.summary()
     return out
 
@@ -125,7 +127,7 @@ def main(argv=None):
     res = run(args.jobs, args.r, args.seed, scenarios=args.scenarios,
               scenario_kind=args.scenario_kind, backend=args.backend,
               learners=args.learner, eta_grid=args.eta_grid,
-              scenario_chunk=args.scenario_chunk)
+              scenario_chunk=args.scenario_chunk, mesh=args.mesh)
     rows = [[r, f"{v['alpha_tola']:.4f}", f"{v['alpha_bench']:.4f}",
              f"{v['rho_bar']:.2%}", f"{v['best_fixed']:.4f}",
              f"{v['regret']:.4f}", f"{v['top_weight']:.3f}"]

@@ -25,7 +25,9 @@ Sections:
                     dry-run sweep has been run; see launch/dryrun.py)
 
 Every exp accepts --scenarios S / --scenario-kind / --backend to evaluate S
-spot-market scenarios in one engine pass (S=1 = the paper's tables).
+spot-market scenarios in one engine pass (S=1 = the paper's tables), and
+--mesh N to shard the scenario axis over an N-way device mesh (jax
+backend; clamped to the visible device count).
 """
 
 from __future__ import annotations
@@ -47,6 +49,9 @@ def main(argv=None):
     p.add_argument("--only", nargs="*", default=None,
                    choices=["exp1", "exp2", "exp3", "exp4", "engine",
                             "pipeline", "learn", "roofline"])
+    p.add_argument("--mesh", type=int, default=None,
+                   help="shard the exp1-4 scenario axis over an N-way "
+                        "device mesh (forwarded as --mesh N)")
     args = p.parse_args(argv)
 
     n_jobs = args.jobs or (300 if args.quick else 1500)
@@ -59,25 +64,27 @@ def main(argv=None):
             return name in args.only
         return name not in args.skip
 
+    mesh_args = [] if args.mesh is None else ["--mesh", str(args.mesh)]
+
     t0 = time.time()
     if want("exp1"):
         from benchmarks import exp1_spot_ondemand
         exp1_spot_ondemand.main(["--jobs", str(n_jobs),
-                                 "--types", *map(str, types)])
+                                 "--types", *map(str, types), *mesh_args])
     if want("exp2"):
         from benchmarks import exp2_self_owned
         exp2_self_owned.main(["--jobs", str(n_jobs),
                               "--types", *map(str, types),
-                              "--r", *map(str, rs)])
+                              "--r", *map(str, rs), *mesh_args])
     if want("exp3"):
         from benchmarks import exp3_policy12
         exp3_policy12.main(["--jobs", str(n_jobs),
                             "--types", *map(str, types),
-                            "--r", *map(str, rs)])
+                            "--r", *map(str, rs), *mesh_args])
     if want("exp4"):
         from benchmarks import exp4_online_learning
         exp4_online_learning.main(["--jobs", str(n_jobs),
-                                   "--r", *map(str, rs4)])
+                                   "--r", *map(str, rs4), *mesh_args])
     if want("engine"):
         from benchmarks import bench_engine
         if args.quick:

@@ -57,6 +57,7 @@ def sweep_policies(
     early_start: bool = True,
     backend: str = "auto",
     scenario_chunk: int | None = None,
+    mesh=None,
 ) -> "tuple[Policy, float, StreamCosts, EngineResult]":  # noqa: F821
     """min over a policy grid of the realized average unit cost.
 
@@ -65,14 +66,15 @@ def sweep_policies(
     scenario-mean when several markets are given, its StreamCosts in
     scenario 0, the full EngineResult). ``markets`` accepts everything
     ``evaluate_grid`` does (a market, a list, a ``ScenarioSpec`` /
-    source); ``scenario_chunk`` streams the scenario axis K per pass.
+    source); ``scenario_chunk`` streams the scenario axis K per pass;
+    ``mesh`` shards the scenario axis across devices (DESIGN.md §9).
     """
     from repro.engine import evaluate_grid
 
     res = evaluate_grid(jobs, policies, markets, r_total, windows=windows,
                         selfowned=selfowned, early_start=early_start,
                         pool="shared", backend=backend,
-                        scenario_chunk=scenario_chunk)
+                        scenario_chunk=scenario_chunk, mesh=mesh)
     p, alpha = res.best()
     return policies[p], alpha, res.stream_costs(p, 0), res
 

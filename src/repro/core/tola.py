@@ -204,6 +204,7 @@ def run_tola_scenarios(
     pool_iters: int = 1,
     backend: str = "auto",
     learner="hedge",
+    mesh=None,
 ) -> list[TolaResult]:
     """Algorithm 4 across S market scenarios, cost matrices batched.
 
@@ -215,6 +216,11 @@ def run_tola_scenarios(
     The sequential sample/update replay runs per scenario with seed
     ``seed + s`` — bit-identical to looping single-market ``run_tola``
     (Table 6 output included), just without the per-scenario engine calls.
+
+    ``mesh`` shards the ROUND-0 scenario axis across a device mesh
+    (DESIGN.md §9). Refinement rounds carry per-scenario availability
+    queries — plan tensors differ per scenario, which the sharded path
+    does not support — so they always run unsharded.
     """
     from repro.engine import evaluate_grid
     from repro.learn import as_spec
@@ -232,7 +238,8 @@ def run_tola_scenarios(
         res = evaluate_grid(
             jobs, policies, markets, r_total, windows=windows,
             selfowned=selfowned, early_start=early_start, pool="dedicated",
-            availability=avails, backend=backend)
+            availability=avails, backend=backend,
+            mesh=mesh if avails is None else None)
         C = res.unit_cost
         rounds = [
             _tola_round(jobs, policies, C[s], arrivals, d, Z, spec, rngs[s],

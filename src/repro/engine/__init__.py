@@ -27,6 +27,7 @@ from repro.engine.api import (
     resolve_backend,
     resolve_plan_backend,
 )
+from repro.engine.mesh import ScenarioMesh, as_scenario_mesh
 from repro.engine.plan import EvalGroup, GridPlan, build_grid_plan
 from repro.engine.result import EngineResult
 from repro.engine.scenarios import (
@@ -45,6 +46,7 @@ __all__ = [
     "evaluate_grid", "evaluate_grid_chunks", "GridChunk",
     "available_backends", "resolve_backend", "resolve_plan_backend",
     "EngineResult", "EvalGroup", "GridPlan", "build_grid_plan",
+    "ScenarioMesh", "as_scenario_mesh",
     "ScenarioSpec", "ScenarioStream", "ScenarioBatch", "as_source",
     "make_scenarios", "adversarial_scenarios", "replay_scenarios",
     "check_scenarios", "stack_views",

@@ -44,6 +44,7 @@ import numpy as np
 from repro.core.market import SpotMarket
 from repro.core.scheduler import Policy
 from repro.core.types import ChainJob
+from repro.engine.mesh import as_scenario_mesh
 from repro.engine.plan import build_grid_plan
 from repro.engine.result import EngineResult
 from repro.engine.scenarios import as_source
@@ -165,12 +166,12 @@ def _check_scenario_chunk(scenario_chunk) -> None:
 
 def _prepare_stream(jobs, policies, scenarios, r_total, windows, selfowned,
                     pool, availability, backend, plan_backend,
-                    scenario_chunk):
+                    scenario_chunk, mesh=None, overlap=None):
     """Shared validation + plan build of the chunked evaluation paths.
 
-    Returns ``(source, gplan, backend, chunk, single)`` — the grid plan is
-    built ONCE and reused across every scenario chunk (it is
-    scenario-independent apart from the per-scenario availability case,
+    Returns ``(source, gplan, backend, chunk, single, mesh, overlap)`` —
+    the grid plan is built ONCE and reused across every scenario chunk (it
+    is scenario-independent apart from the per-scenario availability case,
     which requires a single full-batch chunk)."""
     if not jobs:
         raise ValueError("need at least one job")
@@ -188,27 +189,71 @@ def _prepare_stream(jobs, policies, scenarios, r_total, windows, selfowned,
             "availability queries (the plan's self-owned tensors are "
             "indexed by the full scenario axis); evaluate in one chunk")
 
-    backend = resolve_backend(backend)
+    mesh = as_scenario_mesh(mesh)
+    if mesh is not None:
+        # The sharded scenario axis is a jax-backend feature: "auto"
+        # resolves straight to jax; explicit numpy/pallas cannot consume a
+        # mesh and fail here, at the argument that names the conflict.
+        backend = "jax" if backend == "auto" else backend
+        backend = resolve_backend(backend)
+        if backend != "jax":
+            raise ValueError(
+                f"mesh= shards the scenario axis of the jax backend; "
+                f"backend {backend!r} cannot consume a ScenarioMesh "
+                f"(drop mesh= or pass backend='jax'/'auto')")
+        if isinstance(availability, (list, tuple)):
+            raise ValueError(
+                "mesh= cannot shard a batch with per-scenario availability "
+                "queries (the refined plan tensors are stacked along the "
+                "full scenario axis); evaluate those rounds unsharded")
+    else:
+        backend = resolve_backend(backend)
+
+    if overlap is None:
+        overlap = backend != "numpy" and not source.reactive
+    elif overlap and source.reactive:
+        raise ValueError(
+            "overlap=True cannot double-buffer a reactive (adaptive) "
+            "scenario stream: chunk k+1's spikes are planned from feedback "
+            "about chunk k, so its synthesis cannot be dispatched early")
+    overlap = bool(overlap)
+
     plan_backend = resolve_plan_backend(plan_backend, backend, pool)
     gplan = build_grid_plan(
         jobs, policies, r_total, windows=windows, selfowned=selfowned,
         pool=pool, availability=availability,
         slots_per_unit=source.slots_per_unit,
         n_scenarios=S, plan_backend=plan_backend)
-    return source, gplan, backend, chunk, single
+    return source, gplan, backend, chunk, single, mesh, overlap
 
 
-def _dispatch(backend, gplan, batch, early_start, out, interpret) -> None:
+def _dispatch(backend, gplan, batch, early_start, out, interpret,
+              mesh=None) -> None:
     if backend == "numpy":
         from repro.engine import backend_numpy
         backend_numpy.run(gplan, batch, early_start, out)
     elif backend == "jax":
         from repro.engine import backend_jax
-        backend_jax.run(gplan, batch, early_start, out)
+        backend_jax.run(gplan, batch, early_start, out, mesh=mesh)
     else:
         from repro.engine import backend_pallas
         backend_pallas.run(gplan, batch, early_start, out,
                            interpret=interpret)
+
+
+def _prefetched(stream):
+    """Double-buffer a chunk stream: DISPATCH chunk k+1's (async, device)
+    synthesis before yielding chunk k, so it computes while the consumer
+    evaluates k. Lookahead depth 1 — at most two chunks of synthesis
+    output are live at once, keeping the chunk-sized-memory contract."""
+    prev = None
+    for item in stream:
+        item[2].dispatch()
+        if prev is not None:
+            yield prev
+        prev = item
+    if prev is not None:
+        yield prev
 
 
 @dataclasses.dataclass
@@ -227,7 +272,7 @@ class GridChunk:
     unit_cost: np.ndarray          # (s1 - s0, J, P)
     out: dict                      # per-cell cost decomposition, chunk-sized
     workload: np.ndarray           # (J,)
-    timings: dict                  # {"synth": s, "eval": s}
+    timings: dict                  # {"synth": s, "eval": s, "overlap": bool}
 
 
 def evaluate_grid_chunks(
@@ -245,6 +290,8 @@ def evaluate_grid_chunks(
     backend: str = "auto",
     plan_backend: str = "auto",
     interpret: bool | None = None,
+    mesh=None,
+    overlap: bool | None = None,
 ) -> Iterator[GridChunk]:
     """Stream the grid evaluation one scenario chunk at a time.
 
@@ -256,31 +303,41 @@ def evaluate_grid_chunks(
     AFTER the previous one was consumed, which is exactly the chunk
     boundary the adaptive adversary's feedback round-trip is defined at.
 
+    ``mesh`` shards the scenario axis over a device mesh (jax backend
+    only — see :func:`evaluate_grid`); ``overlap`` double-buffers chunk
+    synthesis (default: on for non-numpy backends, off for reactive
+    adaptive streams, whose chunks cannot be prefetched).
+
     Validation (and the plan build) runs EAGERLY at the call, not at the
     first ``next()`` — a bad ``scenario_chunk`` fails here, at the call
     site it names.
     """
-    source, gplan, backend, chunk, _ = _prepare_stream(
+    source, gplan, backend, chunk, _, mesh, overlap = _prepare_stream(
         jobs, policies, scenarios, r_total, windows, selfowned, pool,
-        availability, backend, plan_backend, scenario_chunk)
+        availability, backend, plan_backend, scenario_chunk, mesh, overlap)
 
     def _iter():
         J, P = gplan.n_jobs, gplan.n_policies
         wl = np.maximum(gplan.workload, 1e-12)
-        for s0, s1, batch in source.chunks(chunk,
-                                           device=(backend != "numpy")):
+        stream = source.chunks(chunk, device=(backend != "numpy"),
+                               mesh=mesh)
+        if overlap:
+            stream = _prefetched(stream)
+        for s0, s1, batch in stream:
             t0 = time.perf_counter()
             batch.prepare()
             synth_t = time.perf_counter() - t0
             out = {k: np.zeros((s1 - s0, J, P)) for k in _OUT_KEYS}
             t0 = time.perf_counter()
-            _dispatch(backend, gplan, batch, early_start, out, interpret)
+            _dispatch(backend, gplan, batch, early_start, out, interpret,
+                      mesh)
             eval_t = time.perf_counter() - t0
             unit = (out["spot_cost"] + out["ondemand_cost"]) \
                 / wl[None, :, None]
             yield GridChunk(s0=s0, s1=s1, unit_cost=unit, out=out,
                             workload=gplan.workload.copy(),
-                            timings={"synth": synth_t, "eval": eval_t})
+                            timings={"synth": synth_t, "eval": eval_t,
+                                     "overlap": overlap})
 
     return _iter()
 
@@ -301,6 +358,8 @@ def evaluate_grid(
     interpret: bool | None = None,
     scenario_chunk: int | None = None,
     reduce: str = "stack",
+    mesh=None,
+    overlap: bool | None = None,
 ) -> EngineResult:
     """Evaluate every job under every policy in every market scenario.
 
@@ -331,15 +390,32 @@ def evaluate_grid(
     :func:`resolve_plan_backend`); ``timings["plan_device"]`` reports the
     device-build seconds (0.0 on the host plan path). ``interpret``
     forces/forbids pallas interpret mode (default: interpret off-TPU).
+
+    ``mesh`` shards the SCENARIO axis across a device mesh (DESIGN.md §9):
+    pass a ``ScenarioMesh``, an int shard count (clamped to available
+    devices with a warning), or a jax ``Mesh`` with a ``"data"`` axis.
+    Mesh evaluation is a jax-backend feature ("auto" resolves to jax;
+    numpy/pallas raise) — each shard synthesizes and scores only its own
+    scenario slice, with no cross-device traffic in the compiled programs;
+    a chunk whose scenario count is not divisible by the shard count is
+    padded (last scenario repeated) and sliced back before results reach
+    the caller, so results are independent of the mesh size (1-device mesh
+    bitwise-identical to unsharded jax). ``overlap`` double-buffers chunk
+    synthesis on the device paths: chunk k+1's synthesis is dispatched
+    (async) before chunk k's evaluation blocks. Default: on for non-numpy
+    backends, forced off for reactive adaptive streams (their chunks
+    cannot be prefetched); ``timings["overlap"]`` records the resolved
+    flag, and the per-chunk ``synth`` entries then measure the RESIDUAL
+    wait, not the full synthesis time.
     """
     if reduce not in _REDUCES:
         raise ValueError(f"unknown reduce {reduce!r}; pick from {_REDUCES}")
     if reduce == "mean" and isinstance(availability, (list, tuple)):
         raise ValueError("reduce='mean' cannot fold per-scenario "
                          "availability results; use reduce='stack'")
-    source, gplan, backend, chunk, single = _prepare_stream(
+    source, gplan, backend, chunk, single, mesh, overlap = _prepare_stream(
         jobs, policies, scenarios, r_total, windows, selfowned, pool,
-        availability, backend, plan_backend, scenario_chunk)
+        availability, backend, plan_backend, scenario_chunk, mesh, overlap)
     S, J, P = source.n_scenarios, gplan.n_jobs, gplan.n_policies
 
     if reduce == "stack":
@@ -352,7 +428,10 @@ def evaluate_grid(
     # Mirrors evaluate_grid_chunks' loop ON PURPOSE: the stack path writes
     # backend output straight into the (S, J, P) slices — layering on
     # GridChunk would pay a full extra tensor copy per chunk.
-    for s0, s1, batch in source.chunks(chunk, device=(backend != "numpy")):
+    stream = source.chunks(chunk, device=(backend != "numpy"), mesh=mesh)
+    if overlap:
+        stream = _prefetched(stream)
+    for s0, s1, batch in stream:
         t0 = time.perf_counter()
         batch.prepare()
         synth_t = time.perf_counter() - t0
@@ -361,7 +440,8 @@ def evaluate_grid(
         else:
             out_chunk = {k: v[:s1 - s0] for k, v in buf.items()}
         t0 = time.perf_counter()
-        _dispatch(backend, gplan, batch, early_start, out_chunk, interpret)
+        _dispatch(backend, gplan, batch, early_start, out_chunk, interpret,
+                  mesh)
         eval_t = time.perf_counter() - t0
         if reduce == "mean":
             for k in _OUT_KEYS:
@@ -405,7 +485,7 @@ def evaluate_grid(
         # device-build time.
         timings={"plan": gplan.plan_seconds, "pool": gplan.pool_seconds,
                  "eval": eval_total, "synth": synth_total,
-                 "chunks": chunk_timings,
+                 "chunks": chunk_timings, "overlap": overlap,
                  "plan_device": (gplan.plan_seconds
                                  if gplan.device else 0.0)},
     )

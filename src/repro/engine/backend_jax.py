@@ -21,9 +21,19 @@ the cost jit.
 The jitted entry points live at module scope and take every plan array as
 a traced argument, so repeated ``evaluate_grid`` calls reuse the compile
 cache (one compilation per distinct batch shape, not per call).
+
+Sharded path (DESIGN.md §9): with a ``ScenarioMesh`` the same two batch
+bodies are ``shard_map``ed over the scenario axis — stacked views arrive
+padded and sharded (``ScenarioBatch.n_rows`` rows), plan arrays are
+replicated, every shard scores only its own scenario slice, and the
+compiled program contains ZERO cross-device collectives (the scenario
+axis never reduces inside the cost tensor). Results are sliced back to
+the valid scenario count on the host side of the scatter.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -35,14 +45,26 @@ from repro.kernels.ref import chain_costs_ref, policy_cost_ref
 __all__ = ["run"]
 
 
-@jax.jit
-def _chain_batch(A, C, arrival, ends, z_t, d_eff, pins, p_od, slot):
+def _chain_body(A, C, arrival, ends, z_t, d_eff, pins, p_od, slot):
     """(S, n+1) stacked views x (R, L) row batch -> dict of (S, R)."""
     fn = jax.vmap(
         lambda a, c: chain_costs_ref(a, c, arrival, ends, z_t, d_eff, pins,
                                      p_od=p_od, slot=slot),
         in_axes=(0, 0))
     return fn(A, C)
+
+
+def _task_body(A, C, starts, ends, z_t, d_eff, p_od, slot):
+    """Planned-start (per-task) edition -> dict of (S, R*L)."""
+    fn = jax.vmap(
+        lambda a, c: policy_cost_ref(a, c, starts, ends, z_t, d_eff,
+                                     p_od=p_od, slot=slot),
+        in_axes=(0, 0))
+    return fn(A, C)
+
+
+_chain_batch = jax.jit(_chain_body)
+_task_batch = jax.jit(_task_body)
 
 
 @jax.jit
@@ -56,16 +78,6 @@ def _chain_batch_ps(A, C, arrival, ends, z_t, d_eff, pins, p_od, slot):
 
 
 @jax.jit
-def _task_batch(A, C, starts, ends, z_t, d_eff, p_od, slot):
-    """Planned-start (per-task) edition -> dict of (S, R*L)."""
-    fn = jax.vmap(
-        lambda a, c: policy_cost_ref(a, c, starts, ends, z_t, d_eff,
-                                     p_od=p_od, slot=slot),
-        in_axes=(0, 0))
-    return fn(A, C)
-
-
-@jax.jit
 def _task_batch_ps(A, C, starts, ends, z_t, d_eff, p_od, slot):
     """Planned-start with per-scenario (S, R*L) cloud workloads."""
     fn = jax.vmap(
@@ -75,19 +87,53 @@ def _task_batch_ps(A, C, starts, ends, z_t, d_eff, p_od, slot):
     return fn(A, C, z_t, d_eff)
 
 
-def run(gplan, batch, early_start: bool, out) -> None:
+@functools.lru_cache(maxsize=None)
+def _sharded_fns(mesh):
+    """The two batch bodies shard_map'ed over a ``ScenarioMesh``.
+
+    Views (leading scenario axis) shard over ``"data"``; plan arrays and
+    scalars replicate. Cached per mesh so repeated calls reuse the
+    compiled program exactly like the unsharded module-scope jits.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    dp = mesh.spec("scenario")   # P("data")
+    rp = mesh.spec()             # empty P(): replicated, any rank
+    chain = jax.jit(shard_map(
+        _chain_body, mesh=mesh.mesh,
+        in_specs=(dp, dp, rp, rp, rp, rp, rp, rp, rp), out_specs=dp))
+    task = jax.jit(shard_map(
+        _task_body, mesh=mesh.mesh,
+        in_specs=(dp, dp, rp, rp, rp, rp, rp, rp), out_specs=dp))
+    return {"chain": chain, "task": task}
+
+
+def run(gplan, batch, early_start: bool, out, mesh=None) -> None:
     slot = batch.slot
     p_od = batch.p_ondemand
     J = gplan.n_jobs
     S = batch.n_scenarios
+    rows = batch.n_rows if mesh is not None else S
     ps = gplan.per_scenario
+    if mesh is not None and ps:
+        # api.py guards this combination; keep the invariant loud here too.
+        raise ValueError("sharded evaluation does not support per-scenario "
+                         "availability plans (full-batch, unsharded only)")
     f32 = lambda a: jnp.asarray(a, jnp.float32)
+    if mesh is not None:
+        fns = _sharded_fns(mesh)
+        chain_fn, task_fn = fns["chain"], fns["task"]
+        scalar = jnp.float32
+    else:
+        chain_fn, task_fn = _chain_batch, _task_batch
+        scalar = lambda x: x
 
     for bid in gplan.bids:
         groups = gplan.groups_for_bid(bid)
-        # (S, n_slots+1) stacked views, cached on the batch per bid —
+        # (rows, n_slots+1) stacked views, cached on the batch per bid —
         # already-f32 device tensors when the chunk was synthesized on
-        # device (a spec source), host f64 otherwise.
+        # device (a spec source), host f64 otherwise; padded + sharded
+        # under a mesh.
         A, C = batch.stacked(bid)
         A, C = f32(A), f32(C)
         ends = concat_rows([g.plan.ends for g in groups])
@@ -106,8 +152,9 @@ def run(gplan, batch, early_start: bool, out) -> None:
                                       jnp.asarray(pins), p_od, slot)
             else:
                 pins = concat_rows([g.pins for g in groups])
-                res = _chain_batch(A, C, f32(arrival), f32(ends), f32(z_t),
-                                   f32(d_eff), jnp.asarray(pins), p_od, slot)
+                res = chain_fn(A, C, f32(arrival), f32(ends), f32(z_t),
+                               f32(d_eff), jnp.asarray(pins), scalar(p_od),
+                               scalar(slot))
         else:
             starts = concat_rows([g.plan.starts for g in groups])
             R, L = ends.shape
@@ -117,15 +164,17 @@ def run(gplan, batch, early_start: bool, out) -> None:
                     f32(z_t.reshape(S, R * L)),
                     f32(d_eff.reshape(S, R * L)), p_od, slot)
             else:
-                res = _task_batch(
+                res = task_fn(
                     A, C, f32(starts.ravel()), f32(ends.ravel()),
                     f32(z_t.reshape(R * L)), f32(d_eff.reshape(R * L)),
-                    p_od, slot)
-            res = {k: v.reshape(S, R, L).sum(axis=2)
+                    scalar(p_od), scalar(slot))
+            res = {k: v.reshape(rows, R, L).sum(axis=2)
                    for k, v in res.items() if k != "finish"}
         shape = (S, len(groups), J)
         for key in ("spot_cost", "ondemand_cost", "spot_work",
                     "ondemand_work"):
-            vals = np.asarray(res[key], np.float64).reshape(shape)
+            # [:S] drops the mesh padding rows (duplicates of the last
+            # scenario) before the host scatter.
+            vals = np.asarray(res[key], np.float64)[:S].reshape(shape)
             for gi, g in enumerate(groups):
                 out[key][:, :, g.policy_idx] = vals[:, gi, :, None]

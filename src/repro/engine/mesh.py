@@ -1,0 +1,142 @@
+"""Scenario-axis device mesh (DESIGN.md §9).
+
+The scenario axis is embarrassingly parallel — each scenario's price path,
+per-bid views, and counterfactual costs are independent; only the regret
+fold crosses scenarios — so sharding it is pure data parallelism: a 1-D
+mesh whose single axis is named ``"data"`` (matching ``launch/mesh.py``'s
+production meshes, where a future 2-D scenario x bid layout would add the
+``"model"`` axis), with the logical axis ``scenario -> "data"`` routed
+through the ``distributed/sharding.py`` rule table.
+
+``ScenarioMesh`` is hashable (it keys the backends' compiled-program
+caches) and owns the padding contract: a chunk of K scenarios is padded to
+``pad(K)`` rows — the LAST row repeated — so every shard holds the same
+row count; padded rows carry real (duplicated) scenario data, are masked
+out of every reduction, and are sliced off before results reach the
+caller. See DESIGN.md §9 for the placement diagram.
+
+This module imports jax lazily so ``repro.engine`` stays importable in
+environments without it (the numpy oracle path).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+import numpy as np
+
+__all__ = ["ScenarioMesh", "as_scenario_mesh"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioMesh:
+    """A 1-D ``"data"`` mesh over devices plus its logical-axis rule table.
+
+    Frozen and hashable — ``backend_jax`` and the learn-fold cache one
+    compiled ``shard_map`` program per (mesh, shape) key.
+    """
+
+    mesh: Any                 # jax.sharding.Mesh (hashable)
+    rules: Any                # distributed.sharding.ShardingRules
+
+    @classmethod
+    def create(cls, n_devices: int | None = None) -> "ScenarioMesh":
+        """Mesh over ``n_devices`` (default: all), clamped to what exists.
+
+        Clamping warns rather than raises so ``--mesh 8`` scripts run
+        unchanged on a 1-device box (the 1-device mesh is bit-identical to
+        the unsharded path).
+        """
+        import jax
+
+        from repro.distributed.sharding import ShardingRules
+        from repro.launch.mesh import make_mesh
+
+        avail = len(jax.devices())
+        n = avail if n_devices is None else int(n_devices)
+        if n < 1:
+            raise ValueError(f"mesh needs >= 1 device (got {n_devices})")
+        if n > avail:
+            warnings.warn(
+                f"requested a {n}-way scenario mesh but only {avail} "
+                f"device(s) are visible — clamping to {avail} (set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count=N to "
+                f"fake N host devices on CPU)", stacklevel=2)
+            n = avail
+        mesh = make_mesh((n,), ("data",))
+        rules = ShardingRules.create(
+            mesh, overrides={"scenario": "data", "bid": None})
+        return cls(mesh=mesh, rules=rules)
+
+    @property
+    def n_shards(self) -> int:
+        return self.mesh.devices.size
+
+    def pad(self, k: int) -> int:
+        """Rows after padding k scenarios to a multiple of the shard count."""
+        n = self.n_shards
+        return -(-k // n) * n
+
+    def spec(self, *logical_axes: str | None):
+        """PartitionSpec through the rule table (``"scenario" -> "data"``)."""
+        return self.rules.spec(*logical_axes)
+
+    def sharding(self, *logical_axes: str | None):
+        """NamedSharding placing the named logical axes on this mesh."""
+        from jax.sharding import NamedSharding
+
+        return NamedSharding(self.mesh, self.spec(*logical_axes))
+
+    def pad_rows(self, a: np.ndarray) -> np.ndarray:
+        """Pad a leading-scenario host array to ``pad(len)`` rows (repeat
+        the last row — real data, masked/sliced away downstream)."""
+        k = a.shape[0]
+        kp = self.pad(k)
+        if kp == k:
+            return a
+        reps = np.repeat(a[-1:], kp - k, axis=0)
+        return np.concatenate([a, reps], axis=0)
+
+    def put_rows(self, a):
+        """Pad + device_put a leading-scenario array sharded over the mesh."""
+        import jax
+
+        return jax.device_put(self.pad_rows(np.asarray(a)),
+                              self.sharding("scenario"))
+
+
+def as_scenario_mesh(mesh) -> ScenarioMesh | None:
+    """Normalize every accepted ``mesh=`` argument.
+
+    Accepts ``None`` (unsharded), a ``ScenarioMesh``, an int (shard count,
+    clamped to available devices), or a raw jax ``Mesh`` whose axes include
+    ``"data"``.
+    """
+    if mesh is None or isinstance(mesh, ScenarioMesh):
+        return mesh
+    if isinstance(mesh, bool):
+        raise ValueError(f"mesh must be None, an int shard count, a "
+                         f"ScenarioMesh, or a jax Mesh (got {mesh!r})")
+    if isinstance(mesh, (int, np.integer)):
+        return ScenarioMesh.create(int(mesh))
+    try:
+        from jax.sharding import Mesh
+    except Exception as e:  # pragma: no cover - jax-less environment
+        raise ValueError(
+            "mesh= requires importable jax (the sharded scenario axis is "
+            "a jax-backend feature)") from e
+    if isinstance(mesh, Mesh):
+        if "data" not in mesh.axis_names:
+            raise ValueError(
+                f"scenario mesh needs a 'data' axis (got axes "
+                f"{tuple(mesh.axis_names)}); build one with "
+                f"ScenarioMesh.create(n) or make_mesh((n,), ('data',))")
+        from repro.distributed.sharding import ShardingRules
+
+        rules = ShardingRules.create(
+            mesh, overrides={"scenario": "data", "bid": None})
+        return ScenarioMesh(mesh=mesh, rules=rules)
+    raise ValueError(f"mesh must be None, an int shard count, a "
+                     f"ScenarioMesh, or a jax Mesh (got {type(mesh)})")

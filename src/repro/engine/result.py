@@ -40,7 +40,11 @@ class EngineResult:
     # "eval" (backend market realization, summed over scenario chunks),
     # "synth" (scenario price-path synthesis/materialization, summed),
     # "plan_device" (seconds the plan tensors were built on device — 0.0 on
-    # the host plan path), "chunks" (the per-chunk synth/eval split).
+    # the host plan path), "chunks" (the per-chunk synth/eval split),
+    # "overlap" (whether chunk synthesis was double-buffered: chunk k+1
+    # dispatched async before chunk k's eval blocked — when True, "synth"
+    # measures only the RESIDUAL wait, so synth_total shrinking vs an
+    # overlap=False run of the same workload is the overlap win).
     timings: dict | None = None
 
     @property

@@ -363,13 +363,20 @@ class ScenarioSpec:
 # one compiled XLA program per spec forever (LRU eviction caps retention;
 # bench_pipeline's synthesis sweep additionally cache_clear()s per size).
 @functools.lru_cache(maxsize=32)
-def _device_synth_fn(spec: ScenarioSpec):
+def _device_synth_fn(spec: ScenarioSpec, mesh=None):
     """Jitted generator: global indices (+ wave params) -> chunk tensors.
 
     Returns ``(levels int32 (K, n), prices f32 (K, n), spike bool (K, n))``
     on device. Levels are bit-identical to the host hash; prices are the
     f32 evaluation of the same transform (value noise ~1e-7, harmless —
     availability never reads them, see ``_device_views_fn``).
+
+    With ``mesh`` (a ``ScenarioMesh``) the generator is ``shard_map``ed
+    over the scenario axis: each shard hashes only its own GLOBAL indices,
+    so per-shard synthesis is bit-identical to monolithic by construction
+    and the program contains zero cross-device collectives (asserted in
+    tests/test_shard.py). Row counts must be padded to the shard count —
+    ``SynthBatch`` owns that contract.
     """
     import jax
     import jax.numpy as jnp
@@ -402,11 +409,17 @@ def _device_synth_fn(spec: ScenarioSpec):
             price = jnp.where(spike, jnp.float32(hi), lure)
         return h.astype(jnp.int32), price, spike
 
-    return jax.jit(gen)
+    if mesh is None:
+        return jax.jit(gen)
+    from jax.experimental.shard_map import shard_map
+
+    dp = mesh.spec("scenario")
+    return jax.jit(shard_map(gen, mesh=mesh.mesh,
+                             in_specs=(dp, dp, dp, dp), out_specs=dp))
 
 
 @functools.lru_cache(maxsize=None)
-def _device_views_fn(slot: float):
+def _device_views_fn(slot: float, mesh=None):
     """Jitted (levels, prices, spike, thresholds) -> stacked (A, C) views.
 
     Availability is the EXACT integer comparison ``level <= threshold`` —
@@ -415,6 +428,10 @@ def _device_views_fn(slot: float):
     the cost kernels' searchsorted queries are knife-edge-sensitive to);
     C_cum is an f32 cumsum of the payment steps (value-only, tolerance
     covered by the engine's 1e-5 parity contract).
+
+    With ``mesh`` the view build is ``shard_map``ed per scenario shard
+    (cumsums run along the SLOT axis, within a row — no cross-scenario,
+    hence no cross-device, dependence).
     """
     import jax
     import jax.numpy as jnp
@@ -431,7 +448,15 @@ def _device_views_fn(slot: float):
         _, C = stacked_view_arrays(price, avail, slot, xp=jnp)
         return A, C
 
-    return jax.jit(views)
+    if mesh is None:
+        return jax.jit(views)
+    from jax.experimental.shard_map import shard_map
+
+    dp = mesh.spec("scenario")
+    rp = mesh.spec()   # empty P(): replicated, valid for rank-0 scalars
+    return jax.jit(shard_map(views, mesh=mesh.mesh,
+                             in_specs=(dp, dp, dp, dp, rp),
+                             out_specs=dp))
 
 
 # --------------------------------------------------------------------------
@@ -459,6 +484,11 @@ class ScenarioBatch:
     arrays, computed once per bid and cached (the no-recompute contract —
     repeated calls hand back the same arrays). ``markets`` lazily adapts
     the chunk to host-only consumers (the numpy oracle backend).
+
+    With a ``ScenarioMesh`` the stacked tensors are padded to ``n_rows``
+    (a multiple of the shard count; the last scenario repeated) and placed
+    sharded over the mesh's ``"data"`` axis — consumers slice results back
+    to ``n_scenarios`` valid rows (the DESIGN.md §9 padding contract).
     """
 
     slot: float
@@ -468,8 +498,21 @@ class ScenarioBatch:
     n_scenarios: int
     device: bool = False
 
-    def __init__(self):
+    def __init__(self, mesh=None):
         self._stacked: dict[float, tuple] = {}
+        self.mesh = mesh
+
+    @property
+    def n_rows(self) -> int:
+        """Row count of the stacked tensors (padded under a mesh)."""
+        if self.mesh is None:
+            return self.n_scenarios
+        return self.mesh.pad(self.n_scenarios)
+
+    def dispatch(self) -> "ScenarioBatch":
+        """Launch (but do not await) the chunk's synthesis — the
+        double-buffering hook: a no-op wherever synthesis is host work."""
+        return self
 
     def prepare(self) -> "ScenarioBatch":
         """Synthesize/realize the chunk's price paths (timed by the API)."""
@@ -478,7 +521,12 @@ class ScenarioBatch:
     def stacked(self, bid: float):
         key = _bid_key(bid)
         if key not in self._stacked:
-            self._stacked[key] = self._build_views(bid)
+            A, C = self._build_views(bid)
+            if self.mesh is not None and isinstance(A, np.ndarray):
+                # Host-built views under a mesh: pad + place sharded once,
+                # here, so every backend consumes one layout.
+                A, C = self.mesh.put_rows(A), self.mesh.put_rows(C)
+            self._stacked[key] = (A, C)
         return self._stacked[key]
 
     def _build_views(self, bid: float):
@@ -492,8 +540,9 @@ class ScenarioBatch:
 class MarketListBatch(ScenarioBatch):
     """Materialized scenarios: a list of ``SpotMarket`` objects."""
 
-    def __init__(self, markets: Sequence[SpotMarket], *, checked=False):
-        super().__init__()
+    def __init__(self, markets: Sequence[SpotMarket], *, checked=False,
+                 mesh=None):
+        super().__init__(mesh=mesh)
         self._markets = list(markets)
         if not checked:
             check_scenarios(self._markets)
@@ -524,8 +573,9 @@ class SynthBatch(ScenarioBatch):
 
     def __init__(self, spec: ScenarioSpec, start: int, stop: int,
                  periods: np.ndarray | None = None,
-                 offsets: np.ndarray | None = None, device: bool = False):
-        super().__init__()
+                 offsets: np.ndarray | None = None, device: bool = False,
+                 mesh=None):
+        super().__init__(mesh=mesh)
         if device and not spec.generative:
             raise ValueError("replay traces are host data; device synthesis "
                              "supports the generative families only")
@@ -543,28 +593,52 @@ class SynthBatch(ScenarioBatch):
         self._parts = None
         self._markets: list[SpotMarket] | None = None
 
+    def _pad(self, a: np.ndarray) -> np.ndarray:
+        """Pad a per-scenario parameter row to ``n_rows`` (repeat the last
+        entry — the padded rows synthesize a real, duplicated scenario)."""
+        if self.mesh is None or len(a) == self.n_rows:
+            return a
+        return np.concatenate(
+            [a, np.repeat(a[-1:], self.n_rows - len(a), axis=0)])
+
+    def dispatch(self) -> "SynthBatch":
+        """Launch the device synthesis WITHOUT blocking on the result.
+
+        jax dispatch is async: the synthesis of this chunk runs while the
+        caller is still consuming the previous one (the double-buffering
+        win ``EngineResult.timings['overlap']`` tracks). ``prepare`` then
+        only pays the residual wait. Host synthesis stays synchronous (no
+        async runtime to hand it to) and keeps its work in ``prepare``.
+        """
+        if not self.device or self._parts is not None:
+            return self
+        import jax.numpy as jnp
+
+        if self.spec.kind in ("adversarial", "adaptive"):
+            periods = self._periods if self._periods is not None \
+                else self.spec.default_periods(self._idx)
+            pslots, sslots = self.spec.wave_slots(periods)
+        else:
+            pslots = np.full(self.n_scenarios, 2, np.int64)
+            sslots = np.ones(self.n_scenarios, np.int64)
+        offsets = np.full(self.n_scenarios, -1, np.int64) \
+            if self._offsets is None else self._offsets
+        self._parts = _device_synth_fn(self.spec, self.mesh)(
+            jnp.asarray(self._pad(self._idx), jnp.int32),
+            jnp.asarray(self._pad(pslots), jnp.int32),
+            jnp.asarray(self._pad(sslots), jnp.int32),
+            jnp.asarray(self._pad(offsets), jnp.int32))
+        return self
+
     def prepare(self) -> "SynthBatch":
         if not self.device:
             self.markets  # noqa: B018 — realize the oracle rows (timed)
             return self
         if self._parts is None:
-            import jax
-            import jax.numpy as jnp
+            self.dispatch()
+        import jax
 
-            if self.spec.kind in ("adversarial", "adaptive"):
-                periods = self._periods if self._periods is not None \
-                    else self.spec.default_periods(self._idx)
-                pslots, sslots = self.spec.wave_slots(periods)
-            else:
-                pslots = np.full(self.n_scenarios, 2, np.int64)
-                sslots = np.ones(self.n_scenarios, np.int64)
-            offsets = np.full(self.n_scenarios, -1, np.int64) \
-                if self._offsets is None else self._offsets
-            self._parts = jax.block_until_ready(_device_synth_fn(self.spec)(
-                jnp.asarray(self._idx, jnp.int32),
-                jnp.asarray(pslots, jnp.int32),
-                jnp.asarray(sslots, jnp.int32),
-                jnp.asarray(offsets, jnp.int32)))
+        self._parts = jax.block_until_ready(self._parts)
         return self
 
     @property
@@ -589,11 +663,12 @@ class SynthBatch(ScenarioBatch):
 
         self.prepare()
         h, price, spike = self._parts
-        thresh = jnp.asarray(self.spec.thresholds(bid, self._idx))
+        thresh = jnp.asarray(
+            self.spec.thresholds(bid, self._pad(self._idx)))
         spike_clears = self.spec.price_hi <= bid + 1e-12
         return jax.block_until_ready(
-            _device_views_fn(self.slot)(h, price, spike, thresh,
-                                        spike_clears))
+            _device_views_fn(self.slot, self.mesh)(h, price, spike, thresh,
+                                                   spike_clears))
 
 
 # --------------------------------------------------------------------------
@@ -612,7 +687,14 @@ class ScenarioSource:
     def slot(self) -> float:
         return 1.0 / self.slots_per_unit
 
-    def chunks(self, chunk: int, device: bool = False):
+    @property
+    def reactive(self) -> bool:
+        """True when chunk k+1's CONTENT depends on feedback about chunk k
+        (the adaptive adversary) — such a stream cannot be prefetched, so
+        the engine's double-buffering is disabled for it."""
+        return False
+
+    def chunks(self, chunk: int, device: bool = False, mesh=None):
         raise NotImplementedError
 
     def observe(self, values: np.ndarray) -> None:
@@ -639,15 +721,22 @@ class _ListSource(ScenarioSource):
     def markets(self) -> list[SpotMarket]:
         return self._whole.markets
 
-    def chunks(self, chunk: int, device: bool = False):
+    def chunks(self, chunk: int, device: bool = False, mesh=None):
         S = self.n_scenarios
-        if chunk >= S:
+        if chunk >= S and mesh is None:
             yield 0, S, self._whole
+            return
+        if chunk >= S:
+            # Fresh batch under a mesh: the cached whole-list batch's
+            # per-bid views are unsharded host arrays — mixing layouts in
+            # one cache would hand a later unsharded call padded tensors.
+            yield 0, S, MarketListBatch(self._whole.markets, checked=True,
+                                        mesh=mesh)
             return
         for s0 in range(0, S, chunk):
             s1 = min(s0 + chunk, S)
             yield s0, s1, MarketListBatch(self._whole.markets[s0:s1],
-                                          checked=True)
+                                          checked=True, mesh=mesh)
 
 
 class ScenarioStream(ScenarioSource):
@@ -771,14 +860,19 @@ class ScenarioStream(ScenarioSource):
             self._p_count[self._locked_period] += len(values)
         self._pending = None
 
-    def chunks(self, chunk: int, device: bool = False):
+    @property
+    def reactive(self) -> bool:
+        return self.spec.kind == "adaptive"
+
+    def chunks(self, chunk: int, device: bool = False, mesh=None):
         S = self.n_scenarios
         device = device and self.spec.generative
         for s0 in range(0, S, chunk):
             s1 = min(s0 + chunk, S)
             periods, offsets = self._plan_chunk(np.arange(s0, s1))
             yield s0, s1, SynthBatch(self.spec, s0, s1, periods=periods,
-                                     offsets=offsets, device=device)
+                                     offsets=offsets, device=device,
+                                     mesh=mesh)
 
 
 def as_source(scenarios) -> ScenarioSource:

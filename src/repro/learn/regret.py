@@ -188,6 +188,36 @@ class StreamLearnResult:
         self.n_chunks += 1
         return regret[:, 0]
 
+    def fold_sums(self, n: int, realized, expected, regret, regret_sq,
+                  best_fixed: float, curve, curve_sq, weights,
+                  top_weight) -> None:
+        """Fold one chunk's PRE-REDUCED sums (specs order, already summed
+        over the chunk's scenario axis — the sharded replay fold's psum
+        output). Same accumulator state as ``fold``, without ever holding
+        the chunk's per-scenario arrays on the host."""
+        if self.n_scenarios == 0:
+            K, J = np.shape(curve)
+            P = np.shape(weights)[-1]
+            self.realized_sum = np.zeros(K)
+            self.expected_sum = np.zeros(K)
+            self.regret_sum = np.zeros(K)
+            self.regret_sq = np.zeros(K)
+            self.curve_sum = np.zeros((K, J))
+            self.curve_sq = np.zeros((K, J))
+            self.weights_sum = np.zeros((K, P))
+            self.top_weight_sum = np.zeros(K)
+        self.realized_sum += realized
+        self.expected_sum += expected
+        self.regret_sum += regret
+        self.regret_sq += regret_sq
+        self.best_fixed_sum += float(best_fixed)
+        self.curve_sum += curve
+        self.curve_sq += curve_sq
+        self.weights_sum += weights
+        self.top_weight_sum += top_weight
+        self.n_scenarios += int(n)
+        self.n_chunks += 1
+
     # -- scenario-mean statistics (match LearnResult's .mean(axis=0)) ------
     def realized_unit(self) -> np.ndarray:
         return self.realized_sum / self.n_scenarios

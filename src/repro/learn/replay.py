@@ -115,17 +115,16 @@ def _replay_numpy_one(C, spec, u, ev_kind, ev_j, etas, gammas):
     return chosen, p_sel, e_cost, weights
 
 
-@functools.lru_cache(maxsize=None)
-def _compiled_scan(kind: str, ring: int):
-    """Jitted event scan for one learner kind, cached across replay calls
-    (a fresh closure per call would force an XLA recompile per call).
+def _scan_one(kind: str, ring: int):
+    """The single-(scenario, instance) event scan — the traceable core
+    shared by the unsharded ``_compiled_scan`` jit and the sharded fold.
 
     The scan carry holds only the learner state plus a small ring buffer of
     in-flight (chosen, p_chosen) pairs — the sample of job j and its
     delayed update are at most ``ring`` jobs apart, so ``j % ring`` slots
     never collide; per-job outputs leave through the scan's stacked ys
     instead of (J,)-sized carries (which would cost a dynamic-update copy
-    per event). Retraces only on new (kind, ring) or new array shapes.
+    per event).
     """
     import jax
     import jax.numpy as jnp
@@ -158,7 +157,26 @@ def _compiled_scan(kind: str, ring: int):
         weights = sample_probs(kind, st, gamma1[-1], jnp)
         return ys[0], ys[1], ys[2], weights
 
-    f = jax.vmap(one, in_axes=(None, None, 0, 0, None, None))  # grid axis
+    return one
+
+
+def _event_ring(ev_kind: np.ndarray) -> int:
+    """Max jobs simultaneously sampled-but-not-updated (+1 so the sample
+    event itself fits): update j reads slot j % ring strictly before any
+    sample j' >= j + ring could overwrite it."""
+    inflight = np.cumsum(np.where(ev_kind == 0, 1, -1))
+    return int(inflight.max(initial=0)) + 1
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_scan(kind: str, ring: int):
+    """Jitted vmapped event scan for one learner kind, cached across replay
+    calls (a fresh closure per call would force an XLA recompile per call).
+    Retraces only on new (kind, ring) or new array shapes."""
+    import jax
+
+    f = jax.vmap(_scan_one(kind, ring),
+                 in_axes=(None, None, 0, 0, None, None))       # grid axis
     f = jax.vmap(f, in_axes=(0, 0, None, None, None, None))    # scenarios
     return jax.jit(f)
 
@@ -168,11 +186,7 @@ def _replay_jax_kind(kind, C, u, etas_k, gammas_k, ev_kind, ev_j):
     schedule-grid instances. C: (S, J, P); u: (S, J); etas/gammas: (K, J)."""
     import jax.numpy as jnp
 
-    # Max jobs simultaneously sampled-but-not-updated (+1 so the sample
-    # event itself fits): update j reads slot j % ring strictly before any
-    # sample j' >= j + ring could overwrite it.
-    inflight = np.cumsum(np.where(ev_kind == 0, 1, -1))
-    ring = int(inflight.max(initial=0)) + 1
+    ring = _event_ring(ev_kind)
     ch_e, ps_e, ec_e, weights = _compiled_scan(kind, ring)(
         jnp.asarray(C, jnp.float32), jnp.asarray(u),
         jnp.asarray(etas_k), jnp.asarray(gammas_k),
@@ -183,6 +197,108 @@ def _replay_jax_kind(kind, C, u, etas_k, gammas_k, ev_kind, ev_j):
     return (np.asarray(ch_e)[..., sample_pos],
             np.asarray(ps_e)[..., sample_pos],
             np.asarray(ec_e)[..., sample_pos], weights)
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fold(smesh, kinds_sig: tuple, ring: int, k0_pos: int):
+    """Sharded replay-and-fold program: scan + regret stats + ONE psum.
+
+    Every shard replays the learners over ITS scenario slice of the padded
+    cost block (grouped by learner kind in ``kinds_sig`` order — tuples of
+    ``(kind, n_instances)``), computes the per-scenario regret statistics
+    locally, masks the padding rows via ``valid``, reduces over its local
+    scenario axis, and packs every per-learner sum into ONE flat vector so
+    the chunk's entire cross-device traffic is a single ``lax.psum`` — the
+    one collective the DESIGN.md §9 contract allows per chunk. The second
+    output (per-scenario realized regret of original learner 0, position
+    ``k0_pos`` in grouped order) stays sharded — it is the adaptive
+    adversary's feedback signal and never crosses devices.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+
+    def fold(C, u, valid, etas, gammas, ev_kind, ev_j, sample_pos, Z):
+        parts = []
+        i = 0
+        for kind, cnt in kinds_sig:
+            f = jax.vmap(_scan_one(kind, ring),
+                         in_axes=(None, None, 0, 0, None, None))
+            f = jax.vmap(f, in_axes=(0, 0, None, None, None, None))
+            parts.append(f(C, u, etas[i:i + cnt], gammas[i:i + cnt],
+                           ev_kind, ev_j))
+            i += cnt
+        ch = jnp.concatenate([p[0] for p in parts], axis=1)
+        ec = jnp.concatenate([p[2] for p in parts], axis=1)
+        w = jnp.concatenate([p[3] for p in parts], axis=1)
+        # Sample events occur in job order: selecting them from the
+        # per-event ys yields the (S_l, K, J) per-job traces.
+        ch = jnp.take(ch, sample_pos, axis=2)
+        ec = jnp.take(ec, sample_pos, axis=2)
+        zsum = Z.sum()
+        per_job = jnp.take_along_axis(
+            C[:, None], ch[..., None], axis=3)[..., 0]          # (S_l, K, J)
+        realized = (per_job * Z).sum(axis=2) / zsum             # (S_l, K)
+        expected = (ec * Z).sum(axis=2) / zsum
+        fixed_cum = (C * Z[:, None]).cumsum(axis=1)             # (S_l, J, P)
+        best_fixed = fixed_cum[:, -1].min(axis=1) / zsum        # (S_l,)
+        regret = realized - best_fixed[:, None]                 # (S_l, K)
+        cum_real = jnp.cumsum(per_job * Z, axis=2)              # (S_l, K, J)
+        p_star = jnp.argmin(fixed_cum[:, -1], axis=1)           # (S_l,)
+        cum_best = jnp.take_along_axis(
+            fixed_cum, p_star[:, None, None], axis=2)[..., 0]   # (S_l, J)
+        curve = (cum_real - cum_best[:, None]) / jnp.cumsum(Z)
+        top_w = w.max(axis=2)                                   # (S_l, K)
+        v = valid.astype(C.dtype)
+        v1 = v[:, None]
+        v2 = v[:, None, None]
+        sums = jnp.concatenate([
+            (realized * v1).sum(0),
+            (expected * v1).sum(0),
+            (regret * v1).sum(0),
+            (regret ** 2 * v1).sum(0),
+            (best_fixed * v).sum()[None],
+            (curve * v2).sum(0).ravel(),
+            (curve ** 2 * v2).sum(0).ravel(),
+            (w * v2).sum(0).ravel(),
+            (top_w * v1).sum(0),
+            v.sum()[None],
+        ])
+        sums = jax.lax.psum(sums, "data")   # the one collective per chunk
+        return sums, regret[:, k0_pos]
+
+    dp = smesh.spec("scenario")
+    rp = smesh.spec()
+    # check_rep=False: shard_map's replication checker can't see through
+    # the lax.scan carry (state touches the sharded C rows) and rejects an
+    # otherwise-valid program; the specs above are the contract.
+    return jax.jit(shard_map(
+        fold, mesh=smesh.mesh,
+        in_specs=(dp, dp, dp, rp, rp, rp, rp, rp, rp),
+        out_specs=(rp, dp), check_rep=False))
+
+
+def _unpack_fold(flat: np.ndarray, K: int, J: int, P: int):
+    """Split the psum'd flat vector back into the named per-learner sums
+    (grouped-learner order — callers reindex by the inverse permutation)."""
+    o = 0
+
+    def take(n):
+        nonlocal o
+        v = flat[o:o + n]
+        o += n
+        return v
+
+    out = {
+        "realized": take(K), "expected": take(K), "regret": take(K),
+        "regret_sq": take(K), "best_fixed": float(take(1)[0]),
+        "curve": take(K * J).reshape(K, J),
+        "curve_sq": take(K * J).reshape(K, J),
+        "weights": take(K * P).reshape(K, P),
+        "top_weight": take(K), "n": int(round(float(take(1)[0]))),
+    }
+    assert o == len(flat)
+    return out
 
 
 def replay(
@@ -312,6 +428,8 @@ def replay_stream(
     selfowned: str = "prop12",
     early_start: bool = True,
     interpret: bool | None = None,
+    mesh=None,
+    overlap: bool | None = None,
 ) -> StreamLearnResult:
     """Regret curves straight from a scenario stream — no (S, J, P) tensor.
 
@@ -323,7 +441,18 @@ def replay_stream(
     replay seed ``seed + s``, so the sampled traces are identical to a
     monolithic ``replay`` over the materialized tensor), and the per-chunk
     ``LearnResult`` is folded into a ``StreamLearnResult`` — running at
-    S = 10^4-10^5 scenarios with chunk-sized peak memory.
+    S = 10^4-10^6 scenarios with chunk-sized peak memory.
+
+    ``mesh`` (a ``ScenarioMesh`` / shard count / ``None``) shards the
+    scenario axis across a device mesh: the engine chunk is evaluated
+    sharded (DESIGN.md §9) AND the replay fold runs as a ``shard_map``
+    program whose only cross-device communication is one ``psum`` of the
+    packed per-learner sums per chunk (``_sharded_fold``). The fold's
+    device arithmetic is float32, so its statistics agree with the host
+    fold to ~1e-4 rather than bitwise. Requires jax replay and engine
+    backends. ``overlap`` double-buffers chunk synthesis (see
+    ``evaluate_grid``); it is rejected for adaptive sources, whose next
+    chunk depends on this chunk's feedback.
 
     When ``scenarios`` is an adaptive ``ScenarioSpec`` / ``ScenarioStream``
     the chunk's realized regret of ``learners[0]`` is fed back through
@@ -333,6 +462,7 @@ def replay_stream(
     round trip).
     """
     from repro.engine.api import evaluate_grid_chunks
+    from repro.engine.mesh import as_scenario_mesh
     from repro.engine.scenarios import as_source
 
     if not jobs:
@@ -346,20 +476,73 @@ def replay_stream(
     if not specs:
         raise ValueError("need at least one learner")
     backend = resolve_backend(backend)
+    mesh = as_scenario_mesh(mesh)
+    if mesh is not None and backend != "jax":
+        raise ValueError(
+            f"mesh= shards the jax replay fold; replay backend resolved to "
+            f"{backend!r} (pass backend='jax' or leave it 'auto' with jax "
+            f"installed)")
 
     source = as_source(scenarios)
     acc = StreamLearnResult(specs=specs, feedback_delay=float(d),
                             backend=backend)
-    for ch in evaluate_grid_chunks(
-            jobs, policies, source, r_total,
-            scenario_chunk=scenario_chunk, windows=windows,
-            selfowned=selfowned, early_start=early_start, pool="dedicated",
-            backend=engine_backend, interpret=interpret):
-        lr = replay(ch.unit_cost, arrivals, d, workload=Z, learners=specs,
-                    seed=seed + ch.s0, backend=backend, interpret=interpret)
-        feedback = acc.fold(lr)
-        # The chunk-boundary round trip: a no-op for every non-adaptive
-        # source; the generator builds the NEXT chunk only after this
-        # returns, so the adversary's state is current when spikes land.
-        source.observe(feedback)
+    stream = evaluate_grid_chunks(
+        jobs, policies, source, r_total,
+        scenario_chunk=scenario_chunk, windows=windows,
+        selfowned=selfowned, early_start=early_start, pool="dedicated",
+        backend=engine_backend, interpret=interpret, mesh=mesh,
+        overlap=overlap)
+    if mesh is None:
+        for ch in stream:
+            lr = replay(ch.unit_cost, arrivals, d, workload=Z,
+                        learners=specs, seed=seed + ch.s0, backend=backend,
+                        interpret=interpret)
+            feedback = acc.fold(lr)
+            # The chunk-boundary round trip: a no-op for every non-adaptive
+            # source; the generator builds the NEXT chunk only after this
+            # returns, so the adversary's state is current when spikes land.
+            source.observe(feedback)
+        return acc
+
+    import jax.numpy as jnp
+
+    # Everything chunk-invariant, once: the event stream, the (K, J)
+    # schedule grids REORDERED so instances of one kind are contiguous
+    # (``_sharded_fold`` runs one scan program per kind group), and the
+    # inverse permutation that puts the folded sums back in specs order.
+    J, m = len(jobs), len(policies)
+    ev_kind, ev_j, _ = build_events(arrivals, d)
+    sample_pos = np.nonzero(ev_kind == 0)[0].astype(np.int32)
+    ring = _event_ring(ev_kind)
+    by_kind: dict[str, list[int]] = {}
+    for k, sp in enumerate(specs):
+        by_kind.setdefault(sp.kind, []).append(k)
+    perm = np.array([k for ks in by_kind.values() for k in ks])
+    inv_perm = np.argsort(perm)
+    kinds_sig = tuple((kind, len(ks)) for kind, ks in by_kind.items())
+    etas = np.stack([sp.eta.values(arrivals, d, m) for sp in specs])[perm]
+    gammas = np.stack([sp.explore.values(arrivals, d, m)
+                       for sp in specs])[perm]
+    fold_fn = _sharded_fold(mesh, kinds_sig, ring, int(inv_perm[0]))
+    consts = (jnp.asarray(etas, jnp.float32), jnp.asarray(gammas,
+              jnp.float32), jnp.asarray(ev_kind), jnp.asarray(ev_j),
+              jnp.asarray(sample_pos), jnp.asarray(Z, jnp.float32))
+
+    for ch in stream:
+        Sc = ch.unit_cost.shape[0]
+        u = np.stack([np.random.default_rng(seed + ch.s0 + s).random(J)
+                      for s in range(Sc)])
+        valid = np.zeros(mesh.pad(Sc), bool)
+        valid[:Sc] = True
+        sums, regret_s = fold_fn(
+            mesh.put_rows(np.asarray(ch.unit_cost, np.float32)),
+            mesh.put_rows(np.asarray(u, np.float32)),
+            mesh.put_rows(valid), *consts)
+        g = _unpack_fold(np.asarray(sums, np.float64), len(specs), J, m)
+        acc.fold_sums(
+            g["n"], g["realized"][inv_perm], g["expected"][inv_perm],
+            g["regret"][inv_perm], g["regret_sq"][inv_perm],
+            g["best_fixed"], g["curve"][inv_perm], g["curve_sq"][inv_perm],
+            g["weights"][inv_perm], g["top_weight"][inv_perm])
+        source.observe(np.asarray(regret_s, np.float64)[:Sc])
     return acc

@@ -1,0 +1,427 @@
+"""Sharded scenario axis (DESIGN.md §9): ScenarioMesh, shard_map'ed
+jobs -> cost -> regret, padding contract, and the one-psum-per-chunk rule.
+
+Fast tests run in-process on whatever devices are visible (a 1-device mesh
+is the degenerate case and must be BITWISE identical to the unsharded jax
+path — same program, same f32 arithmetic). Multi-device behavior (real
+sharding, padding of S % n_shards != 0) runs in a slow subprocess test that
+forces 8 host devices, because the XLA device-count flag must be set before
+jax initializes.
+"""
+
+import json
+import re
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import generate_chain_jobs, selfowned_policies
+from repro.engine import (
+    ScenarioMesh,
+    ScenarioSpec,
+    as_scenario_mesh,
+    evaluate_grid,
+    make_scenarios,
+)
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+
+def _setup(n=20, jt=2, seed=0):
+    jobs = generate_chain_jobs(n, jt, seed=seed)
+    horizon = max(j.deadline for j in jobs) + 1.0
+    return jobs, horizon
+
+
+GRID = selfowned_policies()[:12]
+
+
+# --------------------------------------------------------------------------
+# Mesh construction and argument normalization
+# --------------------------------------------------------------------------
+
+def test_mesh_create_defaults_and_padding():
+    mesh = ScenarioMesh.create()
+    assert mesh.n_shards == len(jax.devices())
+    n = mesh.n_shards
+    assert mesh.pad(0) == 0
+    assert mesh.pad(1) == n
+    assert mesh.pad(n) == n
+    assert mesh.pad(n + 1) == 2 * n
+    a = np.arange(10.0).reshape(5, 2)
+    padded = mesh.pad_rows(a)
+    assert padded.shape[0] == mesh.pad(5)
+    # padding repeats the LAST row — real scenario data, masked downstream
+    assert np.array_equal(padded[5:], np.repeat(a[-1:], len(padded) - 5, 0))
+
+
+def test_mesh_create_clamps_with_warning():
+    avail = len(jax.devices())
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        mesh = ScenarioMesh.create(avail + 7)
+    assert mesh.n_shards == avail
+    assert any("clamping" in str(x.message) for x in w)
+    assert any("xla_force_host_platform_device_count" in str(x.message)
+               for x in w)
+
+
+def test_as_scenario_mesh_normalization():
+    assert as_scenario_mesh(None) is None
+    mesh = ScenarioMesh.create(1)
+    assert as_scenario_mesh(mesh) is mesh
+    assert as_scenario_mesh(1).n_shards == 1
+    with pytest.raises(ValueError):
+        as_scenario_mesh(True)
+    with pytest.raises(ValueError):
+        as_scenario_mesh(0)
+    with pytest.raises(ValueError):
+        as_scenario_mesh("data")
+    # a raw jax Mesh is accepted iff it has a "data" axis
+    from repro.launch.mesh import make_mesh
+    assert as_scenario_mesh(make_mesh((1,), ("data",))).n_shards == 1
+    with pytest.raises(ValueError, match="data"):
+        as_scenario_mesh(make_mesh((1,), ("model",)))
+
+
+def test_mesh_is_hashable_cache_key():
+    m1 = ScenarioMesh.create(1)
+    m2 = ScenarioMesh.create(1)
+    assert hash(m1) == hash(m2)
+    assert m1 == m2
+
+
+# --------------------------------------------------------------------------
+# Guard rails at the API boundary
+# --------------------------------------------------------------------------
+
+def test_mesh_rejects_non_jax_backends():
+    jobs, horizon = _setup()
+    spec = ScenarioSpec("fresh", horizon, 4, seed=3)
+    mesh = ScenarioMesh.create(1)
+    with pytest.raises(ValueError, match="mesh"):
+        evaluate_grid(jobs, GRID, spec, 300, backend="numpy", mesh=mesh)
+    with pytest.raises(ValueError, match="mesh"):
+        evaluate_grid(jobs, GRID, spec, 300, backend="pallas", mesh=mesh)
+
+
+def test_mesh_rejects_per_scenario_availability():
+    jobs, horizon = _setup()
+    markets = make_scenarios(horizon, 2, seed=1)
+    mesh = ScenarioMesh.create(1)
+    avail = [[(0.0, 5.0, 1)] for _ in markets]
+    with pytest.raises(ValueError, match="availability"):
+        evaluate_grid(jobs, GRID, markets, 300, backend="jax", mesh=mesh,
+                      availability=avail)
+
+
+def test_overlap_rejects_reactive_stream():
+    jobs, horizon = _setup()
+    spec = ScenarioSpec("adaptive", horizon, 8, seed=3)
+    with pytest.raises(ValueError, match="reactive|adaptive"):
+        evaluate_grid(jobs, GRID, spec, 300, backend="jax",
+                      scenario_chunk=4, overlap=True)
+
+
+def test_replay_stream_mesh_rejects_numpy_replay():
+    from repro.learn import replay_stream
+
+    jobs, horizon = _setup()
+    spec = ScenarioSpec("fresh", horizon, 4, seed=3)
+    with pytest.raises(ValueError, match="mesh"):
+        replay_stream(jobs, GRID, spec, 300, backend="numpy",
+                      mesh=ScenarioMesh.create(1))
+
+
+# --------------------------------------------------------------------------
+# 1-device mesh: the degenerate case is bitwise the unsharded jax program
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["fresh", "adversarial", "adaptive"])
+def test_one_device_mesh_bitwise_spec(kind):
+    jobs, horizon = _setup()
+    spec = ScenarioSpec(kind, horizon, 5, seed=7)
+    ref = evaluate_grid(jobs, GRID, spec, 300, backend="jax")
+    got = evaluate_grid(jobs, GRID, spec, 300, backend="jax",
+                        mesh=ScenarioMesh.create(1))
+    assert np.array_equal(ref.unit_cost, got.unit_cost)
+    assert np.array_equal(ref.spot_cost, got.spot_cost)
+
+
+def test_one_device_mesh_bitwise_market_list():
+    jobs, horizon = _setup()
+    markets = make_scenarios(horizon, 3, seed=1)
+    ref = evaluate_grid(jobs, GRID, markets, 300, backend="jax")
+    got = evaluate_grid(jobs, GRID, markets, 300, backend="jax",
+                        mesh=ScenarioMesh.create(1))
+    assert np.array_equal(ref.unit_cost, got.unit_cost)
+
+
+def test_one_device_mesh_bitwise_task_path():
+    jobs, horizon = _setup()
+    spec = ScenarioSpec("fresh", horizon, 4, seed=7)
+    ref = evaluate_grid(jobs, GRID, spec, 300, backend="jax",
+                        early_start=False)
+    got = evaluate_grid(jobs, GRID, spec, 300, backend="jax",
+                        early_start=False, mesh=ScenarioMesh.create(1))
+    assert np.array_equal(ref.unit_cost, got.unit_cost)
+
+
+def test_mesh_chunked_uneven_mean_matches_oracle():
+    # S=7 with chunk=3 exercises BOTH uneven weighting (a final short
+    # chunk under reduce="mean") and mesh padding of every chunk.
+    jobs, horizon = _setup()
+    spec = ScenarioSpec("fresh", horizon, 7, seed=7)
+    oracle = evaluate_grid(jobs, GRID, spec, 300, backend="numpy",
+                           reduce="mean").unit_cost
+    sharded = evaluate_grid(jobs, GRID, spec, 300, backend="jax",
+                            scenario_chunk=3, reduce="mean",
+                            mesh=ScenarioMesh.create(1)).unit_cost
+    assert np.abs(sharded - oracle).max() < 1e-5
+    # and without reduce: concatenated chunks, padding sliced off
+    full = evaluate_grid(jobs, GRID, spec, 300, backend="jax",
+                         scenario_chunk=3,
+                         mesh=ScenarioMesh.create(1)).unit_cost
+    assert full.shape[0] == 7
+    mono = evaluate_grid(jobs, GRID, spec, 300, backend="jax").unit_cost
+    assert np.array_equal(full, mono)
+
+
+def test_overlap_bitwise_and_flagged():
+    jobs, horizon = _setup()
+    spec = ScenarioSpec("fresh", horizon, 6, seed=7)
+    ref = evaluate_grid(jobs, GRID, spec, 300, backend="jax",
+                        scenario_chunk=2, overlap=False)
+    ov = evaluate_grid(jobs, GRID, spec, 300, backend="jax",
+                       scenario_chunk=2, overlap=True)
+    assert np.array_equal(ref.unit_cost, ov.unit_cost)
+    assert ov.timings["overlap"] is True
+    assert ref.timings["overlap"] is False
+    # overlap is the DEFAULT for non-reactive jax streams
+    dflt = evaluate_grid(jobs, GRID, spec, 300, backend="jax",
+                         scenario_chunk=2)
+    assert dflt.timings["overlap"] is True
+
+
+def test_replay_stream_sharded_fold_matches_host_fold():
+    from repro.learn import replay_stream
+
+    jobs, horizon = _setup()
+    spec = ScenarioSpec("fresh", horizon, 7, seed=5)
+    # multi-kind learner set exercises the grouped scan + inverse perm
+    learners = ["hedge", "exp3", "egreedy"]
+    ref = replay_stream(jobs, GRID, spec, 300, learners=learners, seed=11,
+                        scenario_chunk=3, backend="jax",
+                        engine_backend="jax")
+    sh = replay_stream(jobs, GRID, spec, 300, learners=learners, seed=11,
+                       scenario_chunk=3, backend="jax",
+                       engine_backend="jax", mesh=ScenarioMesh.create(1))
+    assert sh.n_scenarios == ref.n_scenarios == 7
+    assert sh.n_chunks == ref.n_chunks == 3
+    # device f32 fold vs host f64-on-f32-traces fold: ~1e-4 budget
+    assert np.abs(ref.regret_per_job() - sh.regret_per_job()).max() < 1e-4
+    assert np.abs(ref.realized_unit() - sh.realized_unit()).max() < 1e-4
+    assert abs(ref.best_fixed() - sh.best_fixed()) < 1e-4
+    m0, lo0, hi0 = ref.confidence_bands()
+    m1, lo1, hi1 = sh.confidence_bands()
+    assert np.abs(m0 - m1).max() < 1e-4
+    assert np.abs(hi0 - hi1).max() < 1e-4
+    assert np.abs(ref.weights() - sh.weights()).max() < 1e-4
+    for a, b in zip(ref.summary(), sh.summary()):
+        assert a["learner"] == b["learner"]
+        assert abs(a["top_weight"] - b["top_weight"]) < 1e-4
+        assert abs(a["expected_regret"] - b["expected_regret"]) < 1e-4
+
+
+def test_replay_stream_sharded_adaptive_round_trip():
+    from repro.learn import replay_stream
+
+    jobs, horizon = _setup()
+    spec = ScenarioSpec("adaptive", horizon, 8, seed=5)
+    ref = replay_stream(jobs, GRID, spec, 300, learners=["hedge"], seed=3,
+                        scenario_chunk=4, backend="jax",
+                        engine_backend="jax")
+    sh = replay_stream(jobs, GRID, spec, 300, learners=["hedge"], seed=3,
+                       scenario_chunk=4, backend="jax",
+                       engine_backend="jax", mesh=ScenarioMesh.create(1))
+    # the adversary consumed the SAME feedback signal chunk by chunk
+    assert np.abs(ref.regret_per_job() - sh.regret_per_job()).max() < 1e-4
+
+
+def test_run_tola_scenarios_accepts_mesh():
+    from repro.core import run_tola_scenarios
+
+    jobs, horizon = _setup(n=12)
+    markets = make_scenarios(horizon, 2, seed=1)
+    ref = run_tola_scenarios(jobs, GRID, markets, r_total=300, seed=0,
+                             backend="jax")
+    # mesh applies to round 0 only; refinement rounds are per-scenario
+    got = run_tola_scenarios(jobs, GRID, markets, r_total=300, seed=0,
+                             backend="jax", mesh=ScenarioMesh.create(1))
+    for a, b in zip(ref, got):
+        assert np.array_equal(a.cost_matrix, b.cost_matrix)
+        assert np.array_equal(a.chosen, b.chosen)
+
+
+def test_sweep_policies_accepts_mesh():
+    from repro.core import sweep_policies
+
+    jobs, horizon = _setup(n=12)
+    spec = ScenarioSpec("fresh", horizon, 4, seed=2)
+    _, a_ref, _, _ = sweep_policies(jobs, GRID, spec, 300, backend="jax")
+    _, a_mesh, _, _ = sweep_policies(jobs, GRID, spec, 300, backend="jax",
+                                     mesh=ScenarioMesh.create(1))
+    assert a_ref == a_mesh
+
+
+# --------------------------------------------------------------------------
+# Collective counts in the compiled HLO: the §9 placement contract
+# --------------------------------------------------------------------------
+
+_COLLECTIVES = (r"all-reduce(?:-start)?\(", r"all-gather\(", r"all-to-all\(",
+                r"collective-permute\(", r"reduce-scatter\(")
+
+
+def _count(txt, patterns=_COLLECTIVES):
+    return sum(len(re.findall(p, txt)) for p in patterns)
+
+
+def test_cost_program_has_zero_collectives():
+    # The scenario axis never reduces inside the cost tensor, so the
+    # compiled sharded chain/task programs must contain NO collectives —
+    # sharding the hot loop costs zero cross-device traffic.
+    from repro.engine import backend_jax as bj
+
+    mesh = ScenarioMesh.create()
+    n = mesh.n_shards
+    fns = bj._sharded_fns(mesh)
+    A = jnp.zeros((n, 11), jnp.float32)
+    C = jnp.zeros((n, 11), jnp.float32)
+    chain_args = (A, C, jnp.zeros(4, jnp.float32),
+                  jnp.zeros((4, 3), jnp.float32),
+                  jnp.zeros((4, 3), jnp.float32),
+                  jnp.zeros((4, 3), jnp.float32),
+                  jnp.zeros((4, 3), jnp.bool_),
+                  jnp.float32(1.0), jnp.float32(1.0))
+    txt = fns["chain"].lower(*chain_args).compile().as_text().lower()
+    assert _count(txt) == 0
+    task_args = (A, C, jnp.zeros(12, jnp.float32),
+                 jnp.zeros(12, jnp.float32), jnp.zeros(12, jnp.float32),
+                 jnp.zeros(12, jnp.float32), jnp.float32(1.0),
+                 jnp.float32(1.0))
+    txt = fns["task"].lower(*task_args).compile().as_text().lower()
+    assert _count(txt) == 0
+
+
+def test_synth_program_has_zero_collectives():
+    from repro.engine.scenarios import _device_synth_fn
+
+    jobs, horizon = _setup()
+    mesh = ScenarioMesh.create()
+    n = mesh.n_shards
+    spec = ScenarioSpec("fresh", horizon, n, seed=1)
+    fn = _device_synth_fn(spec, mesh)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    z = jnp.zeros((n, spec.n_slots), jnp.float32)
+    txt = fn.lower(idx, z, z, z).compile().as_text().lower()
+    assert _count(txt) == 0
+
+
+def test_fold_program_has_exactly_one_allreduce():
+    # replay_stream's sharded fold: every per-learner sum rides ONE packed
+    # psum — exactly one all-reduce per chunk, and no other collective.
+    from repro.learn.replay import _event_ring, _sharded_fold, build_events
+
+    jobs, _ = _setup()
+    mesh = ScenarioMesh.create()
+    n = mesh.n_shards
+    arrivals = np.array([j.arrival for j in jobs])
+    d = max(j.deadline - j.arrival for j in jobs)
+    ev_kind, ev_j, _ = build_events(arrivals, d)
+    fold_fn = _sharded_fold(mesh, (("hedge", 1),), _event_ring(ev_kind), 0)
+    J, P = len(jobs), len(GRID)
+    args = (jnp.zeros((2 * n, J, P), jnp.float32),
+            jnp.zeros((2 * n, J), jnp.float32),
+            jnp.ones(2 * n, bool), jnp.zeros((1, J), jnp.float32),
+            jnp.zeros((1, J), jnp.float32), jnp.asarray(ev_kind),
+            jnp.asarray(ev_j),
+            jnp.asarray(np.nonzero(ev_kind == 0)[0].astype(np.int32)),
+            jnp.ones(J, jnp.float32))
+    txt = fold_fn.lower(*args).compile().as_text().lower()
+    assert _count(txt, (r"all-reduce(?:-start)?\(",)) == 1
+    assert _count(txt, _COLLECTIVES[1:]) == 0
+
+
+# --------------------------------------------------------------------------
+# Real multi-device sharding: 8 forced host devices in a subprocess
+# --------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json
+import numpy as np
+import jax
+from repro.core import generate_chain_jobs, selfowned_policies
+from repro.engine import ScenarioMesh, ScenarioSpec, evaluate_grid
+from repro.learn import replay_stream
+
+assert len(jax.devices()) == 8
+jobs = generate_chain_jobs(20, 2, seed=0)
+horizon = max(j.deadline for j in jobs) + 1.0
+grid = selfowned_policies()[:12]
+mesh = ScenarioMesh.create(8)
+out = {"n_shards": mesh.n_shards}
+
+# S=13 % 8 != 0 forces padding; parity vs the f64 oracle AND bitwise vs
+# the unsharded jax program (no cross-scenario arithmetic in the tensor)
+diffs, bitwise = {}, {}
+for kind in ("fresh", "adversarial", "regime"):
+    spec = ScenarioSpec(kind, horizon, 13, seed=7)
+    oracle = evaluate_grid(jobs, grid, spec, 300, backend="numpy").unit_cost
+    sh = evaluate_grid(jobs, grid, spec, 300, backend="jax",
+                       mesh=mesh).unit_cost
+    un = evaluate_grid(jobs, grid, spec, 300, backend="jax").unit_cost
+    diffs[kind] = float(np.abs(sh - oracle).max())
+    bitwise[kind] = bool(np.array_equal(sh, un))
+out["oracle_diffs"] = diffs
+out["bitwise_vs_unsharded"] = bitwise
+
+# sharded replay fold on 8 devices vs the host fold
+spec = ScenarioSpec("fresh", horizon, 13, seed=5)
+ref = replay_stream(jobs, grid, spec, 300, learners=["hedge", "exp3"],
+                    seed=11, scenario_chunk=5, backend="jax",
+                    engine_backend="jax")
+sh = replay_stream(jobs, grid, spec, 300, learners=["hedge", "exp3"],
+                   seed=11, scenario_chunk=5, backend="jax",
+                   engine_backend="jax", mesh=mesh)
+out["fold_n"] = [ref.n_scenarios, sh.n_scenarios]
+out["fold_regret_diff"] = float(
+    np.abs(ref.regret_per_job() - sh.regret_per_job()).max())
+out["fold_curve_diff"] = float(
+    np.abs(ref.confidence_bands()[0] - sh.confidence_bands()[0]).max())
+print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_8_devices_subprocess():
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "HOME": "/root"},
+        cwd="/root/repo", timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_shards"] == 8
+    for kind, diff in res["oracle_diffs"].items():
+        assert diff < 1e-5, (kind, diff)
+    assert all(res["bitwise_vs_unsharded"].values())
+    assert res["fold_n"] == [13, 13]
+    assert res["fold_regret_diff"] < 1e-4
+    assert res["fold_curve_diff"] < 1e-4
