@@ -23,15 +23,31 @@ timing, NOT TPU speed (read the pallas number on real hardware only; see
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import generate_chain_jobs, selfowned_policies
 from repro.engine import build_grid_plan, evaluate_grid, make_scenarios
 
 __all__ = ["run", "main"]
+
+
+def obs_block(reg: "obs.CompiledRegistry") -> dict:
+    """The enriched per-run breakdown every BENCH_*.json entry carries:
+    metrics snapshot (chunk latency / throughput series recorded while the
+    registry collected) + compiled-program flops/bytes/collective counts
+    (captured on the warmup pass, so timed iterations pay nothing)."""
+    return {
+        "metrics": obs.METRICS.snapshot(),
+        "programs": {
+            key: {k: v for k, v in e.items() if k != "warnings"}
+            for key, e in reg.entries.items()
+        },
+    }
 
 
 def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
@@ -66,6 +82,16 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
     except Exception:
         out["jax_backend"] = None
 
+    reg = obs.CompiledRegistry()
+    with obs.METRICS.collecting(reset=True):
+        run_body(out, backends, jobs, grid, markets, r_total, iters, cells,
+                 reg)
+    out["obs"] = obs_block(reg)
+    return out
+
+
+def run_body(out, backends, jobs, grid, markets, r_total, iters, cells,
+             reg):
     ref = None
     for backend in backends:
         warmup = None
@@ -73,8 +99,14 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
         best = float("inf")
         phases = None
         for it in range(iters + 1):
+            # Capture compiled-program metrics on the warmup pass only —
+            # the capture lowers+compiles each announced program once,
+            # which must not count against the timed iterations.
+            cap = obs.capture(reg) if it == 0 else contextlib.nullcontext()
             t0 = time.time()
-            res = evaluate_grid(jobs, grid, markets, r_total, backend=backend)
+            with cap:
+                res = evaluate_grid(jobs, grid, markets, r_total,
+                                    backend=backend)
             dt = time.time() - t0
             if it == 0:          # warmup pass absorbs jit/pallas compilation
                 warmup = dt
@@ -86,6 +118,7 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
             "plan_seconds": phases["plan"],
             "pool_seconds": phases["pool"],
             "eval_seconds": phases["eval"],
+            "synth_seconds": phases["synth"],
             "cells_per_sec_eval": cells / phases["eval"],
             "cells_per_sec_end_to_end": cells / best,
             # Mirrors backend_pallas.run's default: interpret iff CPU.
@@ -125,11 +158,20 @@ def main(argv=None):
     p.add_argument("--backends", nargs="+",
                    default=["numpy", "jax", "pallas"],
                    choices=["numpy", "jax", "pallas"])
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="save a Chrome/Perfetto span trace of the run")
     p.add_argument("--out", default="BENCH_engine.json")
     args = p.parse_args(argv)
-    res = run(args.jobs, args.policies, args.scenarios, args.r,
-              args.backends, seed=args.seed, job_type=args.job_type,
-              iters=args.iters)
+    tracer = obs.Tracer() if args.trace else None
+    ctx = obs.tracing(tracer) if tracer is not None \
+        else contextlib.nullcontext()
+    with ctx:
+        res = run(args.jobs, args.policies, args.scenarios, args.r,
+                  args.backends, seed=args.seed, job_type=args.job_type,
+                  iters=args.iters)
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"wrote Perfetto trace ({len(tracer)} spans): {args.trace}")
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"wrote {args.out}")

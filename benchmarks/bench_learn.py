@@ -24,15 +24,18 @@ and only covers hedge-family instances natively.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import generate_chain_jobs, selfowned_policies
 from repro.engine import evaluate_grid, make_scenarios
 from repro.learn import LEARNER_KINDS
 from repro.learn import replay as learn_replay
+from benchmarks.bench_engine import obs_block
 from benchmarks.exp4_online_learning import comparison_specs
 
 __all__ = ["run", "main"]
@@ -71,14 +74,21 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
         out["jax_backend"] = None
 
     ref = None
+    reg = obs.CompiledRegistry()
+    stack = contextlib.ExitStack()
+    stack.enter_context(obs.METRICS.collecting(reset=True))
     for backend in backends:
         times = []
         warmup = None
         lr = None
         for it in range(iters + 1):
+            # Program capture on the warmup pass only: the capture's
+            # lower+compile must not count against the timed iterations.
+            cap = obs.capture(reg) if it == 0 else contextlib.nullcontext()
             t0 = time.time()
-            lr = learn_replay(res, arrivals, d, learners=specs, seed=seed,
-                              backend=backend)
+            with cap:
+                lr = learn_replay(res, arrivals, d, learners=specs,
+                                  seed=seed, backend=backend)
             dt = time.time() - t0
             if it == 0:          # warmup absorbs jit/pallas compilation
                 warmup = dt
@@ -107,6 +117,8 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
               f"{steps / best / 1e3:10.1f}k steps/s  "
               f"trace mismatch {entry['trace_mismatch_vs_first']:.2e}"
               + ("  (interpret)" if entry["interpret"] else ""))
+    stack.close()
+    out["obs"] = obs_block(reg)
     return out
 
 
@@ -126,11 +138,20 @@ def main(argv=None):
                    choices=["numpy", "jax", "pallas"],
                    help="pallas is opt-in: off-TPU it interprets the "
                         "weight-update kernel (logic check, not speed)")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="save a Chrome/Perfetto span trace of the run")
     p.add_argument("--out", default="BENCH_learn.json")
     args = p.parse_args(argv)
-    res = run(args.jobs, args.policies, args.scenarios, args.r,
-              args.backends, args.learners, args.eta_grid, seed=args.seed,
-              job_type=args.job_type, iters=args.iters)
+    tracer = obs.Tracer() if args.trace else None
+    ctx = obs.tracing(tracer) if tracer is not None \
+        else contextlib.nullcontext()
+    with ctx:
+        res = run(args.jobs, args.policies, args.scenarios, args.r,
+                  args.backends, args.learners, args.eta_grid,
+                  seed=args.seed, job_type=args.job_type, iters=args.iters)
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"wrote Perfetto trace ({len(tracer)} spans): {args.trace}")
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"wrote {args.out}")

@@ -1,0 +1,164 @@
+"""Observability bench: phase/collective table + tracing-overhead gate.
+
+Runs one representative grid under full observation (span tracing, metrics
+collection, compiled-program capture) — an ``evaluate_grid`` chunked
+stream plus a ``replay_stream`` regret fold — and prints:
+
+* the span-derived phase totals (plan / pool / synth / eval / fold), which
+  are by construction the same floats as ``EngineResult.timings``;
+* the compiled-program table (gflops / MB / collective op counts per
+  cached jit program, via ``repro.obs.compiled``) — the standing form of
+  the §9 placement contract (zero collectives in the eval/synth hot loop,
+  one packed psum per streamed fold chunk);
+* the metrics snapshot (chunk latency histogram, scenarios/sec,
+  learner weight entropy).
+
+    PYTHONPATH=src python -m benchmarks.bench_obs \
+        [--jobs 64] [--policies 24] [--scenarios 16] [--chunk 4] \
+        [--backend auto] [--trace out.json] [--overhead-gate 1.1]
+
+``--trace PATH`` saves the Chrome/Perfetto trace JSON of the observed run
+(load it at https://ui.perfetto.dev). ``--overhead-gate R`` additionally
+times the SAME workload untraced vs traced (best of --iters) and exits
+nonzero if traced/untraced exceeds R — the CI tracing-overhead gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.core import generate_chain_jobs, selfowned_policies
+from repro.engine import ScenarioSpec, evaluate_grid, resolve_backend
+from repro.learn import replay_stream
+
+__all__ = ["run", "main"]
+
+
+def _best_of(fn, iters: int) -> float:
+    best = np.inf
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n_jobs: int, n_policies: int, n_scenarios: int, chunk: int,
+        r_total: int, backend: str, seed: int = 0, job_type: int = 2,
+        iters: int = 3, trace_path: str | None = None,
+        overhead_gate: float | None = None) -> dict:
+    backend = resolve_backend(backend)
+    jobs = generate_chain_jobs(n_jobs, job_type, seed=seed)
+    horizon = max(j.deadline for j in jobs) + 1.0
+    grid = selfowned_policies()[:n_policies]
+    spec = ScenarioSpec("fresh", horizon, n_scenarios, seed=seed + 1000)
+
+    def grid_pass():
+        return evaluate_grid(jobs, grid, spec, r_total, backend=backend,
+                             scenario_chunk=chunk)
+
+    def stream_pass():
+        return replay_stream(jobs, grid[:max(4, n_policies // 4)], spec,
+                             r_total, learners=["hedge"], seed=seed,
+                             scenario_chunk=chunk, backend=backend,
+                             engine_backend=backend)
+
+    grid_pass()          # absorb jit compilation before any timing
+    stream_pass()
+
+    # --- the observed run: spans + metrics + compiled capture ------------
+    with obs.observe(programs=True) as session:
+        res = grid_pass()
+        slr = stream_pass()
+    tracer, reg = session.tracer, session.compiled
+    totals = tracer.totals()
+    out = {
+        "backend": backend,
+        "n_jobs": n_jobs,
+        "n_policies": len(grid),
+        "n_scenarios": n_scenarios,
+        "scenario_chunk": chunk,
+        "n_spans": len(tracer),
+        "span_totals": {k: totals[k] for k in sorted(totals)},
+        "timings": {k: v for k, v in res.timings.items() if k != "chunks"},
+        "programs": {
+            key: {k: v for k, v in e.items() if k != "warnings"}
+            for key, e in reg.entries.items()
+        },
+        "factory_caches": obs.compiled.factory_caches(),
+        "metrics": (slr.obs or {}).get("metrics", {}),
+    }
+    print(f"[obs] backend={backend}  {len(tracer)} spans  "
+          f"{len(reg.entries)} compiled programs")
+    print("\nphase totals (span-derived, == EngineResult.timings):")
+    for name in sorted(totals):
+        print(f"  {name:<18} {totals[name]:9.4f}s")
+    print("\n" + reg.table())
+    if trace_path:
+        tracer.save(trace_path)
+        print(f"\nwrote Perfetto trace: {trace_path} "
+              f"(load at https://ui.perfetto.dev)")
+        out["trace_path"] = trace_path
+
+    # --- tracing-overhead gate: traced vs untraced, best of iters --------
+    if overhead_gate is not None:
+        t_plain = _best_of(grid_pass, iters)
+
+        def traced():
+            with obs.tracing():
+                grid_pass()
+
+        t_traced = _best_of(traced, iters)
+        ratio = t_traced / t_plain
+        out["untraced_seconds"] = t_plain
+        out["traced_seconds"] = t_traced
+        out["tracing_overhead_ratio"] = ratio
+        status = "OK" if ratio <= overhead_gate else "FAIL"
+        print(f"\n[overhead] untraced {t_plain:.3f}s  traced {t_traced:.3f}s"
+              f"  ratio {ratio:.3f} (gate {overhead_gate:.2f}) {status}")
+        if ratio > overhead_gate:
+            raise SystemExit(
+                f"tracing overhead {ratio:.3f}x exceeds the "
+                f"{overhead_gate:.2f}x gate")
+    return out
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--jobs", type=int, default=64)
+    p.add_argument("--policies", type=int, default=24)
+    p.add_argument("--scenarios", type=int, default=16)
+    p.add_argument("--chunk", type=int, default=4)
+    p.add_argument("--r", type=int, default=600)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--job-type", type=int, default=2)
+    p.add_argument("--iters", type=int, default=3)
+    p.add_argument("--backend", default="auto",
+                   choices=["auto", "numpy", "jax", "pallas"])
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="save the Chrome/Perfetto trace JSON here")
+    p.add_argument("--overhead-gate", type=float, default=None,
+                   metavar="RATIO",
+                   help="fail if traced/untraced wall exceeds RATIO "
+                        "(CI uses 1.1)")
+    p.add_argument("--out", default=None,
+                   help="optionally dump the full report as JSON")
+    args = p.parse_args(argv)
+    res = run(args.jobs, args.policies, args.scenarios, args.chunk, args.r,
+              args.backend, seed=args.seed, job_type=args.job_type,
+              iters=args.iters, trace_path=args.trace,
+              overhead_gate=args.overhead_gate)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=2)
+        print(f"wrote {args.out}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -53,15 +53,18 @@ sharding on CPU.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import time
 
 import numpy as np
 
+from repro import obs
 from repro.core import Policy, generate_chain_jobs, selfowned_policies
 from repro.core.scheduler import build_plans, build_plans_batch
 from repro.engine import ScenarioSpec, evaluate_grid, make_scenarios
 from repro.engine.plan import distinct_window_params
+from benchmarks.bench_engine import obs_block
 
 __all__ = ["run", "main"]
 
@@ -162,6 +165,14 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
     except Exception:
         out["jax_backend"] = None
 
+    # Metrics collect across every leg; compiled programs are captured on
+    # the warmup pass of each leg (capture lowers+compiles once, which
+    # must not count against the timed iterations). Both land in
+    # out["obs"] — the enriched phase/collective breakdown.
+    reg = obs.CompiledRegistry()
+    _obs_stack = contextlib.ExitStack()
+    _obs_stack.enter_context(obs.METRICS.collecting(reset=True))
+
     if "plan" in sections:
         t_loop = _best_of(
             lambda: [build_plans(jobs, Policy(beta=x, bid=0.0), r_total)
@@ -190,9 +201,12 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
         best = np.inf
         phases = None
         for it in range(iters + 1):
+            cap = obs.capture(reg) if it == 0 else contextlib.nullcontext()
             t0 = time.perf_counter()
-            res = evaluate_grid(jobs, grid, markets, r_total,
-                                backend=backend, plan_backend=plan_backend)
+            with cap:
+                res = evaluate_grid(jobs, grid, markets, r_total,
+                                    backend=backend,
+                                    plan_backend=plan_backend)
             dt = time.perf_counter() - t0
             if it == 0:
                 warmup = dt      # absorbs jit / pallas compilation
@@ -205,7 +219,9 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
             "plan_seconds": phases["plan"],
             "pool_seconds": phases["pool"],
             "eval_seconds": phases["eval"],
-            "synth_seconds": phases.get("synth", 0.0),
+            # timings is always fully populated now (span-derived; the
+            # .get guard predates the empty-dict default of EngineResult)
+            "synth_seconds": phases["synth"],
             "plan_device_seconds": phases["plan_device"],
             "interpret": backend == "pallas"
             and out["jax_backend"] == "cpu",
@@ -245,10 +261,12 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
         best = np.inf
         phases = None
         for it in range(iters + 1):
+            cap = obs.capture(reg) if it == 0 else contextlib.nullcontext()
             t0 = time.perf_counter()
-            res = evaluate_grid(jobs, grid, spec, r_total, backend=backend,
-                                scenario_chunk=chunk, mesh=smesh,
-                                overlap=overlap)
+            with cap:
+                res = evaluate_grid(jobs, grid, spec, r_total,
+                                    backend=backend, scenario_chunk=chunk,
+                                    mesh=smesh, overlap=overlap)
             dt = time.perf_counter() - t0
             if it == 0:
                 warmup = dt
@@ -298,12 +316,14 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
         else:
             _shard_section(out, jobs, grid, stream_leg, mesh,
                            shard_scale_max, r_total, horizon, seed,
-                           job_type)
+                           job_type, reg)
+    _obs_stack.close()
+    out["obs"] = obs_block(reg)
     return out
 
 
 def _shard_section(out, jobs, grid, stream_leg, mesh, shard_scale_max,
-                   r_total, horizon, seed, job_type):
+                   r_total, horizon, seed, job_type, reg):
     """Sharded spec-stream legs + the replay_stream scenario-scaling sweep.
 
     The sweep runs on a REDUCED grid (its point is the scenario axis, not
@@ -334,11 +354,17 @@ def _shard_section(out, jobs, grid, stream_leg, mesh, shard_scale_max,
     S = chunk
     while S <= shard_scale_max:
         spec = ScenarioSpec("fresh", sw_horizon, S, seed=seed + 1)
+        # First sweep point doubles as the capture pass for the sharded
+        # fold program (its one-psum-per-chunk collective count belongs in
+        # the obs block); its wall clock absorbs the capture's compile.
+        cap = obs.capture(reg) if not sweep else contextlib.nullcontext()
         t0 = time.perf_counter()
-        slr = replay_stream(sw_jobs, sw_grid, spec, r_total,
-                            learners=["hedge"], seed=seed,
-                            scenario_chunk=chunk, backend="jax",
-                            engine_backend="jax", mesh=smesh, overlap=True)
+        with cap:
+            slr = replay_stream(sw_jobs, sw_grid, spec, r_total,
+                                learners=["hedge"], seed=seed,
+                                scenario_chunk=chunk, backend="jax",
+                                engine_backend="jax", mesh=smesh,
+                                overlap=True)
         dt = time.perf_counter() - t0
         sweep.append({
             "S": S, "seconds": dt, "scenarios_per_sec": S / dt,
@@ -381,13 +407,24 @@ def main(argv=None):
     p.add_argument("--shard-scale-max", type=int, default=65536,
                    help="largest S of the sharded replay_stream scaling "
                         "sweep (the committed baseline uses 1048576)")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="save a Chrome/Perfetto span trace of the run "
+                        "(CI uploads this from the smoke grid)")
     p.add_argument("--out", default="BENCH_pipeline.json")
     args = p.parse_args(argv)
-    res = run(args.jobs, args.policies, args.scenarios, args.r,
-              args.backends, seed=args.seed, job_type=args.job_type,
-              iters=args.iters, scenario_sweep_max=args.scenario_sweep_max,
-              sections=args.only, mesh=args.mesh,
-              shard_scale_max=args.shard_scale_max)
+    tracer = obs.Tracer() if args.trace else None
+    ctx = obs.tracing(tracer) if tracer is not None \
+        else contextlib.nullcontext()
+    with ctx:
+        res = run(args.jobs, args.policies, args.scenarios, args.r,
+                  args.backends, seed=args.seed, job_type=args.job_type,
+                  iters=args.iters,
+                  scenario_sweep_max=args.scenario_sweep_max,
+                  sections=args.only, mesh=args.mesh,
+                  shard_scale_max=args.shard_scale_max)
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"wrote Perfetto trace ({len(tracer)} spans): {args.trace}")
     with open(args.out, "w") as f:
         json.dump(res, f, indent=2)
     print(f"wrote {args.out}")

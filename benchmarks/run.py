@@ -20,9 +20,18 @@ Sections:
                     scan-compiled jax replay) across a learner x eta-grid
                     sweep over the same grid; emits BENCH_learn.json
                     (benchmarks/bench_learn.py)
+  obs             — observability report for one representative grid: the
+                    span-derived phase totals, the compiled-program
+                    gflops/MB/collective table, and the metrics snapshot
+                    (benchmarks/bench_obs.py; --trace saves the Perfetto
+                    trace of that run)
   roofline        — per-(arch x shape) roofline terms from the compiled
                     dry-run (reads benchmarks/roofline_cache.json if the
                     dry-run sweep has been run; see launch/dryrun.py)
+
+--trace PATH runs the WHOLE driver under the repro.obs span tracer and
+saves one Chrome/Perfetto trace JSON covering every selected section
+(load it at https://ui.perfetto.dev).
 
 Every exp accepts --scenarios S / --scenario-kind / --backend to evaluate S
 spot-market scenarios in one engine pass (S=1 = the paper's tables), and
@@ -43,15 +52,16 @@ def main(argv=None):
                    help="jobs per stream (default: 1500; --quick: 300)")
     p.add_argument("--quick", action="store_true",
                    help="small streams / reduced grids for CI-speed runs")
-    p.add_argument("--skip", nargs="*", default=[],
-                   choices=["exp1", "exp2", "exp3", "exp4", "engine",
-                            "pipeline", "learn", "roofline"])
-    p.add_argument("--only", nargs="*", default=None,
-                   choices=["exp1", "exp2", "exp3", "exp4", "engine",
-                            "pipeline", "learn", "roofline"])
+    sections = ["exp1", "exp2", "exp3", "exp4", "engine", "pipeline",
+                "learn", "obs", "roofline"]
+    p.add_argument("--skip", nargs="*", default=[], choices=sections)
+    p.add_argument("--only", nargs="*", default=None, choices=sections)
     p.add_argument("--mesh", type=int, default=None,
                    help="shard the exp1-4 scenario axis over an N-way "
                         "device mesh (forwarded as --mesh N)")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="trace the whole run with the repro.obs span "
+                        "tracer and save the Chrome/Perfetto JSON here")
     args = p.parse_args(argv)
 
     n_jobs = args.jobs or (300 if args.quick else 1500)
@@ -66,7 +76,24 @@ def main(argv=None):
 
     mesh_args = [] if args.mesh is None else ["--mesh", str(args.mesh)]
 
+    import contextlib
+
+    from repro import obs
+
+    tracer = obs.Tracer() if args.trace else None
+    ctx = obs.tracing(tracer) if tracer is not None \
+        else contextlib.nullcontext()
+
     t0 = time.time()
+    with ctx:
+        _sections(args, want, n_jobs, types, rs, rs4, mesh_args)
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"wrote Perfetto trace ({len(tracer)} spans): {args.trace}")
+    print(f"\n[benchmarks total: {time.time() - t0:.1f}s]")
+
+
+def _sections(args, want, n_jobs, types, rs, rs4, mesh_args):
     if want("exp1"):
         from benchmarks import exp1_spot_ondemand
         exp1_spot_ondemand.main(["--jobs", str(n_jobs),
@@ -106,10 +133,17 @@ def main(argv=None):
                               "--scenarios", "2", "--iters", "1"])
         else:
             bench_learn.main([])
+    if want("obs"):
+        from benchmarks import bench_obs
+        # Explicit jax (like the bench_engine/bench_learn default backend
+        # lists): "auto" resolves to numpy on CPU, whose run captures no
+        # compiled programs — the point of this section.
+        obs_args = (["--jobs", "32", "--policies", "12", "--scenarios", "8",
+                     "--chunk", "4", "--iters", "2"] if args.quick else [])
+        bench_obs.main(obs_args + ["--backend", "jax"])
     if want("roofline"):
         from benchmarks import roofline
         roofline.main([])
-    print(f"\n[benchmarks total: {time.time() - t0:.1f}s]")
 
 
 if __name__ == "__main__":

@@ -36,10 +36,11 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
 from typing import Callable, Iterator, Sequence
 
 import numpy as np
+
+from repro.obs import METRICS, maybe_snapshot, span
 
 from repro.core.market import SpotMarket
 from repro.core.scheduler import Policy
@@ -312,9 +313,11 @@ def evaluate_grid_chunks(
     first ``next()`` — a bad ``scenario_chunk`` fails here, at the call
     site it names.
     """
-    source, gplan, backend, chunk, _, mesh, overlap = _prepare_stream(
-        jobs, policies, scenarios, r_total, windows, selfowned, pool,
-        availability, backend, plan_backend, scenario_chunk, mesh, overlap)
+    with span("prepare_stream"):
+        source, gplan, backend, chunk, _, mesh, overlap = _prepare_stream(
+            jobs, policies, scenarios, r_total, windows, selfowned, pool,
+            availability, backend, plan_backend, scenario_chunk, mesh,
+            overlap)
 
     def _iter():
         J, P = gplan.n_jobs, gplan.n_policies
@@ -323,15 +326,16 @@ def evaluate_grid_chunks(
                                mesh=mesh)
         if overlap:
             stream = _prefetched(stream)
-        for s0, s1, batch in stream:
-            t0 = time.perf_counter()
-            batch.prepare()
-            synth_t = time.perf_counter() - t0
-            out = {k: np.zeros((s1 - s0, J, P)) for k in _OUT_KEYS}
-            t0 = time.perf_counter()
-            _dispatch(backend, gplan, batch, early_start, out, interpret,
-                      mesh)
-            eval_t = time.perf_counter() - t0
+        for ci, (s0, s1, batch) in enumerate(stream):
+            with span("chunk", index=ci, s0=s0, s1=s1, backend=backend):
+                with span("synth", s0=s0, s1=s1, overlap=overlap) as sp_s:
+                    batch.prepare()
+                out = {k: np.zeros((s1 - s0, J, P)) for k in _OUT_KEYS}
+                with span("eval", s0=s0, s1=s1, backend=backend) as sp_e:
+                    _dispatch(backend, gplan, batch, early_start, out,
+                              interpret, mesh)
+            synth_t, eval_t = sp_s.seconds, sp_e.seconds
+            _chunk_metrics(backend, synth_t, eval_t)
             unit = (out["spot_cost"] + out["ondemand_cost"]) \
                 / wl[None, :, None]
             yield GridChunk(s0=s0, s1=s1, unit_cost=unit, out=out,
@@ -340,6 +344,13 @@ def evaluate_grid_chunks(
                                      "overlap": overlap})
 
     return _iter()
+
+
+def _chunk_metrics(backend, synth_t, eval_t):
+    if METRICS.enabled:
+        h = METRICS.histogram("engine.chunk_seconds")
+        h.observe(synth_t, phase="synth", backend=backend)
+        h.observe(eval_t, phase="eval", backend=backend)
 
 
 def evaluate_grid(
@@ -413,45 +424,57 @@ def evaluate_grid(
     if reduce == "mean" and isinstance(availability, (list, tuple)):
         raise ValueError("reduce='mean' cannot fold per-scenario "
                          "availability results; use reduce='stack'")
-    source, gplan, backend, chunk, single, mesh, overlap = _prepare_stream(
-        jobs, policies, scenarios, r_total, windows, selfowned, pool,
-        availability, backend, plan_backend, scenario_chunk, mesh, overlap)
-    S, J, P = source.n_scenarios, gplan.n_jobs, gplan.n_policies
+    with span("evaluate_grid", reduce=reduce) as root:
+        with span("prepare_stream"):
+            source, gplan, backend, chunk, single, mesh, overlap = \
+                _prepare_stream(
+                    jobs, policies, scenarios, r_total, windows, selfowned,
+                    pool, availability, backend, plan_backend,
+                    scenario_chunk, mesh, overlap)
+        S, J, P = source.n_scenarios, gplan.n_jobs, gplan.n_policies
+        root.set(backend=backend, scenarios=S, overlap=overlap)
 
-    if reduce == "stack":
-        out = {k: np.zeros((S, J, P)) for k in _OUT_KEYS}
-    else:
-        acc = {k: np.zeros((J, P)) for k in _OUT_KEYS}
-        buf = {k: np.zeros((chunk, J, P)) for k in _OUT_KEYS}
-    chunk_timings: list[dict] = []
-    synth_total = eval_total = 0.0
-    # Mirrors evaluate_grid_chunks' loop ON PURPOSE: the stack path writes
-    # backend output straight into the (S, J, P) slices — layering on
-    # GridChunk would pay a full extra tensor copy per chunk.
-    stream = source.chunks(chunk, device=(backend != "numpy"), mesh=mesh)
-    if overlap:
-        stream = _prefetched(stream)
-    for s0, s1, batch in stream:
-        t0 = time.perf_counter()
-        batch.prepare()
-        synth_t = time.perf_counter() - t0
         if reduce == "stack":
-            out_chunk = {k: v[s0:s1] for k, v in out.items()}
+            out = {k: np.zeros((S, J, P)) for k in _OUT_KEYS}
         else:
-            out_chunk = {k: v[:s1 - s0] for k, v in buf.items()}
-        t0 = time.perf_counter()
-        _dispatch(backend, gplan, batch, early_start, out_chunk, interpret,
-                  mesh)
-        eval_t = time.perf_counter() - t0
+            acc = {k: np.zeros((J, P)) for k in _OUT_KEYS}
+            buf = {k: np.zeros((chunk, J, P)) for k in _OUT_KEYS}
+        chunk_timings: list[dict] = []
+        synth_total = eval_total = 0.0
+        # Mirrors evaluate_grid_chunks' loop ON PURPOSE: the stack path
+        # writes backend output straight into the (S, J, P) slices —
+        # layering on GridChunk would pay a full extra tensor copy per
+        # chunk.
+        stream = source.chunks(chunk, device=(backend != "numpy"),
+                               mesh=mesh)
+        if overlap:
+            stream = _prefetched(stream)
+        for ci, (s0, s1, batch) in enumerate(stream):
+            with span("chunk", index=ci, s0=s0, s1=s1, backend=backend):
+                with span("synth", s0=s0, s1=s1, overlap=overlap) as sp_s:
+                    batch.prepare()
+                synth_t = sp_s.seconds
+                if reduce == "stack":
+                    out_chunk = {k: v[s0:s1] for k, v in out.items()}
+                else:
+                    out_chunk = {k: v[:s1 - s0] for k, v in buf.items()}
+                with span("eval", s0=s0, s1=s1, backend=backend) as sp_e:
+                    _dispatch(backend, gplan, batch, early_start, out_chunk,
+                              interpret, mesh)
+                eval_t = sp_e.seconds
+            if reduce == "mean":
+                for k in _OUT_KEYS:
+                    acc[k] += out_chunk[k].sum(axis=0)
+            synth_total += synth_t
+            eval_total += eval_t
+            _chunk_metrics(backend, synth_t, eval_t)
+            chunk_timings.append({"scenarios": [s0, s1], "synth": synth_t,
+                                  "eval": eval_t})
         if reduce == "mean":
-            for k in _OUT_KEYS:
-                acc[k] += out_chunk[k].sum(axis=0)
-        synth_total += synth_t
-        eval_total += eval_t
-        chunk_timings.append({"scenarios": [s0, s1], "synth": synth_t,
-                              "eval": eval_t})
-    if reduce == "mean":
-        out = {k: v[None] / S for k, v in acc.items()}
+            out = {k: v[None] / S for k, v in acc.items()}
+    if METRICS.enabled:
+        METRICS.gauge("engine.scenarios_per_sec").set(
+            S / max(root.seconds, 1e-12), backend=backend)
 
     per_scenario = gplan.per_scenario
     so_shape = (S, J, P) if per_scenario else (J, P)
@@ -488,4 +511,5 @@ def evaluate_grid(
                  "chunks": chunk_timings, "overlap": overlap,
                  "plan_device": (gplan.plan_seconds
                                  if gplan.device else 0.0)},
+        obs=maybe_snapshot(),
     )

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.engine.plan import concat_rows, scenario_cat
 from repro.kernels.ref import chain_costs_ref, policy_cost_ref
+from repro.obs import record_jit, span
 
 __all__ = ["run"]
 
@@ -128,53 +129,62 @@ def run(gplan, batch, early_start: bool, out, mesh=None) -> None:
         chain_fn, task_fn = _chain_batch, _task_batch
         scalar = lambda x: x
 
+    sfx = ":sharded" if mesh is not None else ""
     for bid in gplan.bids:
         groups = gplan.groups_for_bid(bid)
-        # (rows, n_slots+1) stacked views, cached on the batch per bid —
-        # already-f32 device tensors when the chunk was synthesized on
-        # device (a spec source), host f64 otherwise; padded + sharded
-        # under a mesh.
-        A, C = batch.stacked(bid)
-        A, C = f32(A), f32(C)
-        ends = concat_rows([g.plan.ends for g in groups])
-        if ps:
-            z_t = scenario_cat(groups, "z_t", S)
-            d_eff = scenario_cat(groups, "d_eff", S)
-        else:
-            z_t = concat_rows([g.z_t for g in groups])
-            d_eff = concat_rows([g.d_eff for g in groups])
-        if early_start:
-            arrival = np.tile(gplan.arrival, len(groups))
+        with span("eval.bid", bid=bid, groups=len(groups)):
+            # (rows, n_slots+1) stacked views, cached on the batch per
+            # bid — already-f32 device tensors when the chunk was
+            # synthesized on device (a spec source), host f64 otherwise;
+            # padded + sharded under a mesh.
+            A, C = batch.stacked(bid)
+            A, C = f32(A), f32(C)
+            ends = concat_rows([g.plan.ends for g in groups])
             if ps:
-                pins = scenario_cat(groups, "pins", S)
-                res = _chain_batch_ps(A, C, f32(arrival), f32(ends),
-                                      f32(z_t), f32(d_eff),
-                                      jnp.asarray(pins), p_od, slot)
+                z_t = scenario_cat(groups, "z_t", S)
+                d_eff = scenario_cat(groups, "d_eff", S)
             else:
-                pins = concat_rows([g.pins for g in groups])
-                res = chain_fn(A, C, f32(arrival), f32(ends), f32(z_t),
-                               f32(d_eff), jnp.asarray(pins), scalar(p_od),
-                               scalar(slot))
-        else:
-            starts = concat_rows([g.plan.starts for g in groups])
-            R, L = ends.shape
-            if ps:
-                res = _task_batch_ps(
-                    A, C, f32(starts.ravel()), f32(ends.ravel()),
-                    f32(z_t.reshape(S, R * L)),
-                    f32(d_eff.reshape(S, R * L)), p_od, slot)
+                z_t = concat_rows([g.z_t for g in groups])
+                d_eff = concat_rows([g.d_eff for g in groups])
+            if early_start:
+                arrival = np.tile(gplan.arrival, len(groups))
+                if ps:
+                    pins = scenario_cat(groups, "pins", S)
+                    args = (A, C, f32(arrival), f32(ends), f32(z_t),
+                            f32(d_eff), jnp.asarray(pins), p_od, slot)
+                    record_jit("engine.eval.chain_ps", _chain_batch_ps,
+                               *args)
+                    res = _chain_batch_ps(*args)
+                else:
+                    pins = concat_rows([g.pins for g in groups])
+                    args = (A, C, f32(arrival), f32(ends), f32(z_t),
+                            f32(d_eff), jnp.asarray(pins), scalar(p_od),
+                            scalar(slot))
+                    record_jit("engine.eval.chain" + sfx, chain_fn, *args)
+                    res = chain_fn(*args)
             else:
-                res = task_fn(
-                    A, C, f32(starts.ravel()), f32(ends.ravel()),
-                    f32(z_t.reshape(R * L)), f32(d_eff.reshape(R * L)),
-                    scalar(p_od), scalar(slot))
-            res = {k: v.reshape(rows, R, L).sum(axis=2)
-                   for k, v in res.items() if k != "finish"}
-        shape = (S, len(groups), J)
-        for key in ("spot_cost", "ondemand_cost", "spot_work",
-                    "ondemand_work"):
-            # [:S] drops the mesh padding rows (duplicates of the last
-            # scenario) before the host scatter.
-            vals = np.asarray(res[key], np.float64)[:S].reshape(shape)
-            for gi, g in enumerate(groups):
-                out[key][:, :, g.policy_idx] = vals[:, gi, :, None]
+                starts = concat_rows([g.plan.starts for g in groups])
+                R, L = ends.shape
+                if ps:
+                    args = (A, C, f32(starts.ravel()), f32(ends.ravel()),
+                            f32(z_t.reshape(S, R * L)),
+                            f32(d_eff.reshape(S, R * L)), p_od, slot)
+                    record_jit("engine.eval.task_ps", _task_batch_ps, *args)
+                    res = _task_batch_ps(*args)
+                else:
+                    args = (A, C, f32(starts.ravel()), f32(ends.ravel()),
+                            f32(z_t.reshape(R * L)),
+                            f32(d_eff.reshape(R * L)), scalar(p_od),
+                            scalar(slot))
+                    record_jit("engine.eval.task" + sfx, task_fn, *args)
+                    res = task_fn(*args)
+                res = {k: v.reshape(rows, R, L).sum(axis=2)
+                       for k, v in res.items() if k != "finish"}
+            shape = (S, len(groups), J)
+            for key in ("spot_cost", "ondemand_cost", "spot_work",
+                        "ondemand_work"):
+                # [:S] drops the mesh padding rows (duplicates of the last
+                # scenario) before the host scatter.
+                vals = np.asarray(res[key], np.float64)[:S].reshape(shape)
+                for gi, g in enumerate(groups):
+                    out[key][:, :, g.policy_idx] = vals[:, gi, :, None]

@@ -41,9 +41,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 
 import numpy as np
+
+from repro.obs import record_jit, span
 
 from repro.core.scheduler import (
     PlanBatch,
@@ -297,30 +298,33 @@ def build_grid_plan(
 def _build_grid_plan_host(jobs, policies, s: _GridStructure, arrays, r_total,
                           windows, selfowned, pool, availability,
                           slots_per_unit) -> GridPlan:
-    t0 = time.perf_counter()
-    if windows == "even":
-        built = build_plans_batch(jobs, windows="even", arrays=arrays)
-    else:
-        built = build_plans_batch(jobs, list(s.key_param.values()),
-                                  windows="dealloc", arrays=arrays)
-    plan_seconds = time.perf_counter() - t0
+    with span("plan", plan_backend="host", windows=windows,
+              n_plans=len(s.key_param)) as sp:
+        if windows == "even":
+            built = build_plans_batch(jobs, windows="even", arrays=arrays)
+        else:
+            built = build_plans_batch(jobs, list(s.key_param.values()),
+                                      windows="dealloc", arrays=arrays)
+    plan_seconds = sp.seconds
 
-    t0 = time.perf_counter()
-    alloc: list[np.ndarray] = [
-        _group_alloc(built[s.a_plan[ai]], s.a_beta0[ai], r_total, selfowned,
-                     pool, availability, slots_per_unit)
-        for ai in range(len(s.a_plan))]
-    groups: list[EvalGroup] = []
-    for gi in range(len(s.g_bid)):
-        ai = s.g_akey[gi]
-        plan = built[s.a_plan[ai]]
-        r_alloc = alloc[ai]
-        z_t, d_eff, pins, so_work, so_res = _cloud_residuals(plan, r_alloc)
-        groups.append(EvalGroup(
-            plan=plan, policy_idx=np.asarray(s.g_pols[gi]), bid=s.g_bid[gi],
-            r_alloc=r_alloc, z_t=z_t, d_eff=d_eff, pins=pins,
-            selfowned_work=so_work, selfowned_reserved=so_res))
-    pool_seconds = time.perf_counter() - t0
+    with span("pool", plan_backend="host", pool=pool,
+              n_groups=len(s.g_bid)) as sp:
+        alloc: list[np.ndarray] = [
+            _group_alloc(built[s.a_plan[ai]], s.a_beta0[ai], r_total,
+                         selfowned, pool, availability, slots_per_unit)
+            for ai in range(len(s.a_plan))]
+        groups: list[EvalGroup] = []
+        for gi in range(len(s.g_bid)):
+            ai = s.g_akey[gi]
+            plan = built[s.a_plan[ai]]
+            r_alloc = alloc[ai]
+            z_t, d_eff, pins, so_work, so_res = _cloud_residuals(plan,
+                                                                 r_alloc)
+            groups.append(EvalGroup(
+                plan=plan, policy_idx=np.asarray(s.g_pols[gi]),
+                bid=s.g_bid[gi], r_alloc=r_alloc, z_t=z_t, d_eff=d_eff,
+                pins=pins, selfowned_work=so_work, selfowned_reserved=so_res))
+    pool_seconds = sp.seconds
     return GridPlan(jobs=jobs, policies=policies, groups=groups,
                     workload=built[0].workload, arrival=built[0].arrival,
                     n_jobs=len(jobs), n_policies=len(policies),
@@ -455,35 +459,43 @@ def _build_grid_plan_device(jobs, policies, s: _GridStructure, arrays,
     b0 = np.asarray([np.nan if b is None else b for b in s.a_beta0])
     akey_of_group = np.asarray(s.g_akey, np.int32)
 
-    t0 = time.perf_counter()
     if availability is None or r_total <= 0:
-        # The fused program: no host staging between windows and residuals.
-        out = jax.block_until_ready(fns["full"](
-            arrays.e, arrays.delta, arrays.mask, arrays.omega, arrays.arrival,
-            arrays.z, xs, plan_of_akey, b0, float(max(r_total, 0)),
-            akey_of_group))
+        full_args = (arrays.e, arrays.delta, arrays.mask, arrays.omega,
+                     arrays.arrival, arrays.z, xs, plan_of_akey, b0,
+                     float(max(r_total, 0)), akey_of_group)
+        record_jit("plan.device.full", fns["full"], *full_args)
+        with span("plan", plan_backend="device", windows=windows) as sp:
+            # The fused program: no host staging between windows and
+            # residuals.
+            out = jax.block_until_ready(fns["full"](*full_args))
         (starts, ends), parts = out[:2], out[2:]
-        plan_seconds = time.perf_counter() - t0
+        plan_seconds = sp.seconds
         pool_seconds = 0.0
     else:
-        sizes, starts, ends = jax.block_until_ready(fns["plans"](
-            arrays.e, arrays.delta, arrays.mask, arrays.omega,
-            arrays.arrival, xs))
-        plan_seconds = time.perf_counter() - t0
+        plans_args = (arrays.e, arrays.delta, arrays.mask, arrays.omega,
+                      arrays.arrival, xs)
+        record_jit("plan.device.plans", fns["plans"], *plans_args)
+        with span("plan", plan_backend="device", windows=windows) as sp:
+            sizes, starts, ends = jax.block_until_ready(
+                fns["plans"](*plans_args))
+        plan_seconds = sp.seconds
         # Availability queries are host callables: stage the planned windows
         # out once, query per distinct (plan, beta_0) cell, ship back.
-        t0 = time.perf_counter()
-        h_starts, h_ends = np.asarray(starts), np.asarray(ends)
-        if isinstance(availability, (list, tuple)):
-            avail = np.stack([[q(h_starts[p], h_ends[p])
-                               for q in availability] for p in plan_of_akey])
-        else:
-            avail = np.stack([availability(h_starts[p], h_ends[p])
-                              for p in plan_of_akey])
-        parts = jax.block_until_ready(fns["groups"](
-            arrays.z, arrays.delta, arrays.mask, sizes, plan_of_akey,
-            b0, jnp.asarray(avail), akey_of_group))
-        pool_seconds = time.perf_counter() - t0
+        with span("pool", plan_backend="device") as sp:
+            h_starts, h_ends = np.asarray(starts), np.asarray(ends)
+            if isinstance(availability, (list, tuple)):
+                avail = np.stack([[q(h_starts[p], h_ends[p])
+                                   for q in availability]
+                                  for p in plan_of_akey])
+            else:
+                avail = np.stack([availability(h_starts[p], h_ends[p])
+                                  for p in plan_of_akey])
+            group_args = (arrays.z, arrays.delta, arrays.mask, sizes,
+                          plan_of_akey, b0, jnp.asarray(avail),
+                          akey_of_group)
+            record_jit("plan.device.groups", fns["groups"], *group_args)
+            parts = jax.block_until_ready(fns["groups"](*group_args))
+        pool_seconds = sp.seconds
 
     nan = np.full(len(jobs), np.nan)
     dev_plans = [PlanBatch(arrival=arrays.arrival, starts=starts[w],

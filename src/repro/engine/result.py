@@ -35,17 +35,26 @@ class EngineResult:
     # Scenarios EVALUATED — differs from the leading axis length only under
     # reduce="mean", where the arrays hold the scenario-mean (axis 1).
     n_scenarios_total: int | None = None
-    # Phase wall seconds: "plan" (window tensors), "pool" (self-owned +
-    # residuals; host availability queries on the staged device path),
-    # "eval" (backend market realization, summed over scenario chunks),
-    # "synth" (scenario price-path synthesis/materialization, summed),
-    # "plan_device" (seconds the plan tensors were built on device — 0.0 on
-    # the host plan path), "chunks" (the per-chunk synth/eval split),
-    # "overlap" (whether chunk synthesis was double-buffered: chunk k+1
-    # dispatched async before chunk k's eval blocked — when True, "synth"
-    # measures only the RESIDUAL wait, so synth_total shrinking vs an
-    # overlap=False run of the same workload is the overlap win).
-    timings: dict | None = None
+    # Phase wall seconds, derived from the repro.obs span tree (every
+    # value IS some span's ``.seconds``; under an active ``obs.trace()``
+    # the same floats appear in the exported trace, so the dict and the
+    # span-derived totals agree bit-for-bit): "plan" (window tensors),
+    # "pool" (self-owned + residuals; host availability queries on the
+    # staged device path), "eval" (backend market realization, summed over
+    # scenario chunks), "synth" (scenario price-path synthesis/
+    # materialization, summed), "plan_device" (seconds the plan tensors
+    # were built on device — 0.0 on the host plan path), "chunks" (the
+    # per-chunk synth/eval split; the per-phase entries sum EXACTLY to the
+    # phase totals), "overlap" (whether chunk synthesis was
+    # double-buffered: chunk k+1 dispatched async before chunk k's eval
+    # blocked — when True, "synth" measures only the RESIDUAL wait, so the
+    # CONTRACT is synth(overlap=True) <= synth(overlap=False) on the same
+    # workload, enforced by tests/test_obs.py; the win is the difference).
+    # Always a dict — empty only for results built outside the engine.
+    timings: dict = dataclasses.field(default_factory=dict)
+    # Observability snapshot ({"metrics": ..., "compiled": ...}) captured
+    # when an ``repro.obs`` collection context was active; None otherwise.
+    obs: dict | None = None
 
     @property
     def n_scenarios(self) -> int:

@@ -58,6 +58,8 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.obs import METRICS, record_jit, span
+
 from repro.core.market import (
     P_ONDEMAND,
     PRICE_HI,
@@ -623,11 +625,17 @@ class SynthBatch(ScenarioBatch):
             sslots = np.ones(self.n_scenarios, np.int64)
         offsets = np.full(self.n_scenarios, -1, np.int64) \
             if self._offsets is None else self._offsets
-        self._parts = _device_synth_fn(self.spec, self.mesh)(
-            jnp.asarray(self._pad(self._idx), jnp.int32),
-            jnp.asarray(self._pad(pslots), jnp.int32),
-            jnp.asarray(self._pad(sslots), jnp.int32),
-            jnp.asarray(self._pad(offsets), jnp.int32))
+        fn = _device_synth_fn(self.spec, self.mesh)
+        args = (jnp.asarray(self._pad(self._idx), jnp.int32),
+                jnp.asarray(self._pad(pslots), jnp.int32),
+                jnp.asarray(self._pad(sslots), jnp.int32),
+                jnp.asarray(self._pad(offsets), jnp.int32))
+        record_jit("scenarios.synth:" + self.spec.kind
+                   + (":sharded" if self.mesh is not None else ""),
+                   fn, *args)
+        with span("synth.dispatch", s0=self.start, s1=self.stop,
+                  kind=self.spec.kind):
+            self._parts = fn(*args)
         return self
 
     def prepare(self) -> "SynthBatch":
@@ -638,7 +646,11 @@ class SynthBatch(ScenarioBatch):
             self.dispatch()
         import jax
 
-        self._parts = jax.block_until_ready(self._parts)
+        # Under overlap the dispatch already ran during the previous
+        # chunk's eval, so this span measures only the RESIDUAL wait — the
+        # quantity EngineResult.timings["synth"] reports per chunk.
+        with span("synth.wait", s0=self.start, s1=self.stop):
+            self._parts = jax.block_until_ready(self._parts)
         return self
 
     @property
@@ -666,9 +678,13 @@ class SynthBatch(ScenarioBatch):
         thresh = jnp.asarray(
             self.spec.thresholds(bid, self._pad(self._idx)))
         spike_clears = self.spec.price_hi <= bid + 1e-12
-        return jax.block_until_ready(
-            _device_views_fn(self.slot, self.mesh)(h, price, spike, thresh,
-                                                   spike_clears))
+        fn = _device_views_fn(self.slot, self.mesh)
+        record_jit("scenarios.views"
+                   + (":sharded" if self.mesh is not None else ""),
+                   fn, h, price, spike, thresh, spike_clears)
+        with span("views", bid=bid, s0=self.start, s1=self.stop):
+            return jax.block_until_ready(
+                fn(h, price, spike, thresh, spike_clears))
 
 
 # --------------------------------------------------------------------------
@@ -776,6 +792,7 @@ class ScenarioStream(ScenarioSource):
         self._f_count = np.zeros(spec.n_phases, np.int64)
         self._locked_period: int | None = None
         self._pending: tuple[str, np.ndarray] | None = None
+        self._last_stage: str | None = None
         self.chunk_periods: list[np.ndarray] = []  # audit trail (time units)
         self.chunk_offsets: list[np.ndarray] = []  # audit trail (slots)
         self._materialized: list[SpotMarket] | None = None
@@ -812,6 +829,12 @@ class ScenarioStream(ScenarioSource):
         if self.spec.kind != "adaptive":
             return None, None
         stage = self.stage
+        if METRICS.enabled:
+            METRICS.counter("scenarios.adaptive_chunks").inc(stage=stage)
+            if self._last_stage is not None and stage != self._last_stage:
+                METRICS.counter("scenarios.adaptive_escalations").inc(
+                    to=stage)
+        self._last_stage = stage
         if stage == "periods":
             menu_idx = idx % self.spec.n_periods
             periods = self._menu[menu_idx]

@@ -43,6 +43,7 @@ from repro.learn.learners import (
     update_state,
 )
 from repro.learn.regret import LearnResult, StreamLearnResult
+from repro.obs import METRICS, maybe_snapshot, record_jit, span
 
 __all__ = ["replay", "replay_stream", "build_events", "available_backends",
            "resolve_backend"]
@@ -187,10 +188,13 @@ def _replay_jax_kind(kind, C, u, etas_k, gammas_k, ev_kind, ev_j):
     import jax.numpy as jnp
 
     ring = _event_ring(ev_kind)
-    ch_e, ps_e, ec_e, weights = _compiled_scan(kind, ring)(
-        jnp.asarray(C, jnp.float32), jnp.asarray(u),
-        jnp.asarray(etas_k), jnp.asarray(gammas_k),
-        jnp.asarray(ev_kind), jnp.asarray(ev_j))
+    fn = _compiled_scan(kind, ring)
+    args = (jnp.asarray(C, jnp.float32), jnp.asarray(u),
+            jnp.asarray(etas_k), jnp.asarray(gammas_k),
+            jnp.asarray(ev_kind), jnp.asarray(ev_j))
+    record_jit("learn.scan:" + kind, fn, *args)
+    with span("replay.scan", kind=kind):
+        ch_e, ps_e, ec_e, weights = fn(*args)
     # Sample events occur in job order: selecting them from the per-event
     # ys yields the per-job traces.
     sample_pos = np.nonzero(ev_kind == 0)[0]
@@ -301,6 +305,24 @@ def _unpack_fold(flat: np.ndarray, K: int, J: int, P: int):
     return out
 
 
+def _weight_metrics(specs, weights_mean) -> None:
+    """Per-chunk learner telemetry: Shannon entropy (nats) of the mean
+    weight posterior and the heaviest expert's share, one labeled series
+    per learner instance. No-op unless the metrics registry is collecting."""
+    if not METRICS.enabled:
+        return
+    w = np.maximum(np.asarray(weights_mean, np.float64), 0.0)
+    w = w / np.maximum(w.sum(axis=1, keepdims=True), 1e-300)
+    ent = -(w * np.log(np.maximum(w, 1e-300))).sum(axis=1)
+    top = w.max(axis=1)
+    hist = METRICS.histogram("learn.weight_entropy")
+    gauge = METRICS.gauge("learn.top_weight")
+    for k, sp in enumerate(specs):
+        label = f"{k}:{sp.kind}"
+        hist.observe(float(ent[k]), learner=label)
+        gauge.set(float(top[k]), learner=label)
+
+
 def replay(
     C,
     arrivals,
@@ -367,44 +389,46 @@ def replay(
     e_cost = np.zeros((S, K, n))
     weights = np.zeros((S, K, m))
 
-    if backend == "numpy":
-        if on_device:
-            C = np.asarray(C, dtype=np.float64)
-            on_device = False
-        for s in range(S):
+    with span("replay", backend=backend, scenarios=S, learners=K):
+        if backend == "numpy":
+            if on_device:
+                C = np.asarray(C, dtype=np.float64)
+                on_device = False
+            for s in range(S):
+                for k, sp in enumerate(specs):
+                    out = _replay_numpy_one(C[s], sp, u[s], ev_kind, ev_j,
+                                            etas[k], gammas[k])
+                    chosen[s, k], p_sel[s, k], e_cost[s, k], \
+                        weights[s, k] = out
+        else:
+            pallas_ks: list[int] = []
+            if backend == "pallas":
+                # The fused kernel implements the full-information
+                # exponentiated-weights trajectory — hedge instances only.
+                pallas_ks = [k for k, sp in enumerate(specs)
+                             if sp.kind == "hedge"]
+                if pallas_ks:
+                    from repro.kernels.weight_update import hedge_replay
+                    out = hedge_replay(C, etas[pallas_ks], u, n_done,
+                                       interpret=interpret)
+                    for i, k in enumerate(pallas_ks):
+                        chosen[:, k] = out["chosen"][:, i]
+                        p_sel[:, k] = out["p_chosen"][:, i]
+                        e_cost[:, k] = out["expected_cost"][:, i]
+                        weights[:, k] = out["weights"][:, i]
+            by_kind: dict[str, list[int]] = {}
             for k, sp in enumerate(specs):
-                out = _replay_numpy_one(C[s], sp, u[s], ev_kind, ev_j,
-                                        etas[k], gammas[k])
-                chosen[s, k], p_sel[s, k], e_cost[s, k], weights[s, k] = out
-    else:
-        pallas_ks: list[int] = []
-        if backend == "pallas":
-            # The fused kernel implements the full-information
-            # exponentiated-weights trajectory — hedge instances only.
-            pallas_ks = [k for k, sp in enumerate(specs)
-                         if sp.kind == "hedge"]
-            if pallas_ks:
-                from repro.kernels.weight_update import hedge_replay
-                out = hedge_replay(C, etas[pallas_ks], u, n_done,
-                                   interpret=interpret)
-                for i, k in enumerate(pallas_ks):
-                    chosen[:, k] = out["chosen"][:, i]
-                    p_sel[:, k] = out["p_chosen"][:, i]
-                    e_cost[:, k] = out["expected_cost"][:, i]
-                    weights[:, k] = out["weights"][:, i]
-        by_kind: dict[str, list[int]] = {}
-        for k, sp in enumerate(specs):
-            if k not in pallas_ks:
-                by_kind.setdefault(sp.kind, []).append(k)
-        for kind, ks in by_kind.items():
-            out = _replay_jax_kind(kind, C, u, etas[ks], gammas[ks],
-                                   ev_kind, ev_j)
-            ch, ps, ec, wf = (np.asarray(o, np.float64) for o in out)
-            for i, k in enumerate(ks):
-                chosen[:, k] = ch[:, i].astype(np.int64)
-                p_sel[:, k] = ps[:, i]
-                e_cost[:, k] = ec[:, i]
-                weights[:, k] = wf[:, i]
+                if k not in pallas_ks:
+                    by_kind.setdefault(sp.kind, []).append(k)
+            for kind, ks in by_kind.items():
+                out = _replay_jax_kind(kind, C, u, etas[ks], gammas[ks],
+                                       ev_kind, ev_j)
+                ch, ps, ec, wf = (np.asarray(o, np.float64) for o in out)
+                for i, k in enumerate(ks):
+                    chosen[:, k] = ch[:, i].astype(np.int64)
+                    p_sel[:, k] = ps[:, i]
+                    e_cost[:, k] = ec[:, i]
+                    weights[:, k] = wf[:, i]
 
     return LearnResult(
         specs=specs, chosen=chosen, p_chosen=p_sel, expected_unit=e_cost,
@@ -493,15 +517,20 @@ def replay_stream(
         backend=engine_backend, interpret=interpret, mesh=mesh,
         overlap=overlap)
     if mesh is None:
-        for ch in stream:
-            lr = replay(ch.unit_cost, arrivals, d, workload=Z,
-                        learners=specs, seed=seed + ch.s0, backend=backend,
-                        interpret=interpret)
-            feedback = acc.fold(lr)
-            # The chunk-boundary round trip: a no-op for every non-adaptive
-            # source; the generator builds the NEXT chunk only after this
-            # returns, so the adversary's state is current when spikes land.
-            source.observe(feedback)
+        with span("replay_stream", backend=backend):
+            for ci, ch in enumerate(stream):
+                with span("fold", chunk=ci, s0=ch.s0, s1=ch.s1):
+                    lr = replay(ch.unit_cost, arrivals, d, workload=Z,
+                                learners=specs, seed=seed + ch.s0,
+                                backend=backend, interpret=interpret)
+                    feedback = acc.fold(lr)
+                _weight_metrics(specs, lr.weights.mean(axis=0))
+                # The chunk-boundary round trip: a no-op for every
+                # non-adaptive source; the generator builds the NEXT chunk
+                # only after this returns, so the adversary's state is
+                # current when spikes land.
+                source.observe(feedback)
+        acc.obs = maybe_snapshot()
         return acc
 
     import jax.numpy as jnp
@@ -528,21 +557,29 @@ def replay_stream(
               jnp.float32), jnp.asarray(ev_kind), jnp.asarray(ev_j),
               jnp.asarray(sample_pos), jnp.asarray(Z, jnp.float32))
 
-    for ch in stream:
-        Sc = ch.unit_cost.shape[0]
-        u = np.stack([np.random.default_rng(seed + ch.s0 + s).random(J)
-                      for s in range(Sc)])
-        valid = np.zeros(mesh.pad(Sc), bool)
-        valid[:Sc] = True
-        sums, regret_s = fold_fn(
-            mesh.put_rows(np.asarray(ch.unit_cost, np.float32)),
-            mesh.put_rows(np.asarray(u, np.float32)),
-            mesh.put_rows(valid), *consts)
-        g = _unpack_fold(np.asarray(sums, np.float64), len(specs), J, m)
-        acc.fold_sums(
-            g["n"], g["realized"][inv_perm], g["expected"][inv_perm],
-            g["regret"][inv_perm], g["regret_sq"][inv_perm],
-            g["best_fixed"], g["curve"][inv_perm], g["curve_sq"][inv_perm],
-            g["weights"][inv_perm], g["top_weight"][inv_perm])
-        source.observe(np.asarray(regret_s, np.float64)[:Sc])
+    with span("replay_stream", backend=backend, sharded=True):
+        for ci, ch in enumerate(stream):
+            Sc = ch.unit_cost.shape[0]
+            u = np.stack([np.random.default_rng(seed + ch.s0 + s).random(J)
+                          for s in range(Sc)])
+            valid = np.zeros(mesh.pad(Sc), bool)
+            valid[:Sc] = True
+            with span("fold", chunk=ci, s0=ch.s0, s1=ch.s1):
+                args = (mesh.put_rows(np.asarray(ch.unit_cost, np.float32)),
+                        mesh.put_rows(np.asarray(u, np.float32)),
+                        mesh.put_rows(valid)) + consts
+                record_jit("learn.fold:sharded", fold_fn, *args)
+                sums, regret_s = fold_fn(*args)
+                g = _unpack_fold(np.asarray(sums, np.float64), len(specs),
+                                 J, m)
+                acc.fold_sums(
+                    g["n"], g["realized"][inv_perm], g["expected"][inv_perm],
+                    g["regret"][inv_perm], g["regret_sq"][inv_perm],
+                    g["best_fixed"], g["curve"][inv_perm],
+                    g["curve_sq"][inv_perm], g["weights"][inv_perm],
+                    g["top_weight"][inv_perm])
+            _weight_metrics(specs,
+                            g["weights"][inv_perm] / max(g["n"], 1))
+            source.observe(np.asarray(regret_s, np.float64)[:Sc])
+    acc.obs = maybe_snapshot()
     return acc

@@ -10,7 +10,6 @@ jax initializes.
 """
 
 import json
-import re
 import subprocess
 import sys
 import warnings
@@ -279,15 +278,15 @@ def test_sweep_policies_accepts_mesh():
 
 
 # --------------------------------------------------------------------------
-# Collective counts in the compiled HLO: the §9 placement contract
+# Collective counts in the compiled programs: the §9 placement contract,
+# read through the standing obs.compiled metrics (not ad-hoc HLO greps).
 # --------------------------------------------------------------------------
 
-_COLLECTIVES = (r"all-reduce(?:-start)?\(", r"all-gather\(", r"all-to-all\(",
-                r"collective-permute\(", r"reduce-scatter\(")
+def _counts(fn, *args):
+    """Per-kind collective op counts of the compiled program."""
+    from repro.obs.compiled import hlo_metrics
 
-
-def _count(txt, patterns=_COLLECTIVES):
-    return sum(len(re.findall(p, txt)) for p in patterns)
+    return hlo_metrics(fn, *args)["collective_counts"]
 
 
 def test_cost_program_has_zero_collectives():
@@ -307,14 +306,12 @@ def test_cost_program_has_zero_collectives():
                   jnp.zeros((4, 3), jnp.float32),
                   jnp.zeros((4, 3), jnp.bool_),
                   jnp.float32(1.0), jnp.float32(1.0))
-    txt = fns["chain"].lower(*chain_args).compile().as_text().lower()
-    assert _count(txt) == 0
+    assert _counts(fns["chain"], *chain_args)["total"] == 0
     task_args = (A, C, jnp.zeros(12, jnp.float32),
                  jnp.zeros(12, jnp.float32), jnp.zeros(12, jnp.float32),
                  jnp.zeros(12, jnp.float32), jnp.float32(1.0),
                  jnp.float32(1.0))
-    txt = fns["task"].lower(*task_args).compile().as_text().lower()
-    assert _count(txt) == 0
+    assert _counts(fns["task"], *task_args)["total"] == 0
 
 
 def test_synth_program_has_zero_collectives():
@@ -327,8 +324,7 @@ def test_synth_program_has_zero_collectives():
     fn = _device_synth_fn(spec, mesh)
     idx = jnp.arange(n, dtype=jnp.int32)
     z = jnp.zeros((n, spec.n_slots), jnp.float32)
-    txt = fn.lower(idx, z, z, z).compile().as_text().lower()
-    assert _count(txt) == 0
+    assert _counts(fn, idx, z, z, z)["total"] == 0
 
 
 def test_fold_program_has_exactly_one_allreduce():
@@ -351,9 +347,9 @@ def test_fold_program_has_exactly_one_allreduce():
             jnp.asarray(ev_j),
             jnp.asarray(np.nonzero(ev_kind == 0)[0].astype(np.int32)),
             jnp.ones(J, jnp.float32))
-    txt = fold_fn.lower(*args).compile().as_text().lower()
-    assert _count(txt, (r"all-reduce(?:-start)?\(",)) == 1
-    assert _count(txt, _COLLECTIVES[1:]) == 0
+    counts = _counts(fold_fn, *args)
+    assert counts["all-reduce"] == 1
+    assert counts["total"] == 1
 
 
 # --------------------------------------------------------------------------
