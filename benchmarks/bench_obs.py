@@ -11,7 +11,9 @@ stream plus a ``replay_stream`` regret fold — and prints:
   the §9 placement contract (zero collectives in the eval/synth hot loop,
   one packed psum per streamed fold chunk);
 * the metrics snapshot (chunk latency histogram, scenarios/sec,
-  learner weight entropy).
+  learner weight entropy) plus the cross-call plan/view cache counters
+  (``engine.plan_cache{event=hit|miss|evict}`` and friends, DESIGN.md
+  §11).
 
     PYTHONPATH=src python -m benchmarks.bench_obs \
         [--jobs 64] [--policies 24] [--scenarios 16] [--chunk 4] \
@@ -99,6 +101,21 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, chunk: int,
     for name in sorted(totals):
         print(f"  {name:<18} {totals[name]:9.4f}s")
     print("\n" + reg.table())
+    print("\ncross-call caches (DESIGN.md §11):")
+    for name in ("engine.plan_cache", "engine.view_cache"):
+        c = out["factory_caches"].get(name)
+        if c:
+            print(f"  {name:<18} {c['hits']:>5} hits  {c['misses']:>5} "
+                  f"misses  {c['evictions']:>4} evictions  "
+                  f"(size {c['currsize']}/{c['maxsize']})")
+    # The labeled counter series of the same events, as recorded under
+    # METRICS during the observed pass (grid_pass snapshots onto res.obs).
+    for mname in ("engine.plan_cache", "engine.view_cache",
+                  "engine.delta_groups_rescored"):
+        m = (res.obs or {}).get("metrics", {}).get(mname)
+        for s in (m or {}).get("series", []):
+            lbl = ",".join(f"{k}={v}" for k, v in s["labels"].items())
+            print(f"  {mname}{{{lbl}}} = {s['value']:g}")
     if trace_path:
         tracer.save(trace_path)
         print(f"\nwrote Perfetto trace: {trace_path} "

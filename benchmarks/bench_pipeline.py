@@ -12,6 +12,20 @@ every non-numpy backend — the HOST plan path (f64 numpy oracle) against
 the DEVICE plan path (``plan_backend="device"``: the whole jobs->plan
 tensor pass as one jit program, ``<backend>+device-plan`` entries).
 
+Cross-call reuse legs (DESIGN.md §11, run FIRST so the cold numbers are
+honest):
+
+* ``jax+warm`` — the identical ``evaluate_grid`` call twice in one
+  process: the first pays every XLA compile and plan build, the second
+  must hit the cross-call plan cache on every group and compile nothing
+  (both counted, via the plan-cache counters and ``CompileWatch``); the
+  cache-smoke CI job gates hit-rate == 100%, warm compiles == 0, and the
+  cold/warm speedup.
+* ``jax+delta`` — ~10% of the grid re-bid, re-scored through
+  ``evaluate_grid_delta`` against the warm result; records how many eval
+  groups were actually re-scored and the max deviation from a full
+  re-eval.
+
 Scenario legs (the stream side of the pipeline):
 
 * ``scenario_synthesis`` — price-path construction throughput, host
@@ -123,7 +137,98 @@ def _synth_sweep(horizon: float, n_scenarios: int, sweep_max: int,
     return {"kind": "fresh", "sweep": sweep}
 
 
-SECTIONS = ("plan", "e2e", "stream", "synth", "shard")
+SECTIONS = ("warm", "plan", "e2e", "stream", "synth", "shard")
+
+
+def _warm_section(out, jobs, grid, horizon, n_scenarios, r_total, cells,
+                  seed):
+    """Cross-call reuse legs (DESIGN.md §11): cold/warm/delta evaluate_grid.
+
+    Runs FIRST among the jax-touching sections so the cold call genuinely
+    pays every XLA compile of the process; the warm call (same
+    jobs/spec/grid, same process) must then hit the plan cache on every
+    group and compile nothing — the cache-smoke CI job gates on exactly
+    these numbers. The jax persistent compilation cache is deliberately
+    NOT wired up here (it would hollow out the cold leg).
+    """
+    import dataclasses
+
+    from repro.engine import cache as engine_cache
+    from repro.engine import evaluate_grid_delta
+    from repro.obs.compiled import CompileWatch
+
+    spec = ScenarioSpec("fresh", horizon, n_scenarios, seed=seed + 1000)
+    engine_cache.clear_caches()
+
+    watch = CompileWatch()
+    with watch:
+        t0 = time.perf_counter()
+        res_cold = evaluate_grid(jobs, grid, spec, r_total, backend="jax")
+        cold = time.perf_counter() - t0
+    cold_compiles = watch.compiles
+
+    pc0 = engine_cache.PLAN_CACHE.cache_info()
+    with watch:
+        t0 = time.perf_counter()
+        res_warm = evaluate_grid(jobs, grid, spec, r_total, backend="jax")
+        warm = time.perf_counter() - t0
+    pc1 = engine_cache.PLAN_CACHE.cache_info()
+    hits, misses = pc1.hits - pc0.hits, pc1.misses - pc0.misses
+    entry = {
+        "cold_end_to_end_seconds": cold,
+        "end_to_end_seconds": warm,
+        "warm_speedup": cold / warm,
+        "cold_compiles": cold_compiles,
+        "warm_compiles": watch.compiles,
+        "compile_watch_supported": watch.supported,
+        "plan_cache_hits": hits,
+        "plan_cache_misses": misses,
+        "plan_cache_hit_rate": hits / max(hits + misses, 1),
+        "plan_cached_groups": res_warm.timings.get("plan_cached", 0),
+        "cells_per_sec_end_to_end": cells / warm,
+        "max_abs_diff_vs_cold": float(
+            np.abs(res_warm.unit_cost - res_cold.unit_cost).max()),
+    }
+    out["backends"]["jax+warm"] = entry
+    print(f"[jax+warm        ] cold {cold:7.3f}s ({cold_compiles} compiles)"
+          f"  warm {warm:7.3f}s ({watch.compiles} compiles, "
+          f"{hits}/{hits + misses} plan-cache hits)  "
+          f"{entry['warm_speedup']:.1f}x")
+
+    # ~10% of the grid gets perturbed bids -> new eval groups; the delta
+    # path re-scores only those and splices everything else straight out
+    # of res_warm's tensors.
+    idx = list(range(0, len(grid), 10))
+    grid2 = list(grid)
+    for k, i in enumerate(idx):
+        grid2[i] = dataclasses.replace(
+            grid[i], bid=grid[i].bid * 1.01 + 1e-4 * (k + 1))
+    # Full re-eval FIRST: it pays the XLA compiles for the new bids'
+    # batch shapes, so the delta timing below measures the work saved by
+    # re-scoring fewer groups, not a compile-order artifact.
+    t0 = time.perf_counter()
+    res_full = evaluate_grid(jobs, grid2, spec, r_total, backend="jax")
+    t_full = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res_delta = evaluate_grid_delta(res_warm, jobs, grid2, spec, r_total,
+                                    backend="jax")
+    t_delta = time.perf_counter() - t0
+    dentry = {
+        "end_to_end_seconds": t_delta,
+        "full_end_to_end_seconds": t_full,
+        "delta_speedup": t_full / t_delta,
+        "n_policies_changed": len(idx),
+        "delta_groups_rescored": int(
+            res_delta.timings["delta_groups_rescored"]),
+        "delta_groups_total": int(res_delta.timings["delta_groups_total"]),
+        "max_abs_diff_vs_full": float(
+            np.abs(res_delta.unit_cost - res_full.unit_cost).max()),
+    }
+    out["backends"]["jax+delta"] = dentry
+    print(f"[jax+delta       ] {t_delta:7.3f}s re-scoring "
+          f"{dentry['delta_groups_rescored']}/{dentry['delta_groups_total']} "
+          f"groups (full {t_full:7.3f}s, {dentry['delta_speedup']:.1f}x, "
+          f"max diff {dentry['max_abs_diff_vs_full']:.2e})")
 
 
 def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
@@ -172,6 +277,13 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, r_total: int,
     reg = obs.CompiledRegistry()
     _obs_stack = contextlib.ExitStack()
     _obs_stack.enter_context(obs.METRICS.collecting(reset=True))
+
+    if "warm" in sections:
+        if out["jax_backend"] is None or "jax" not in backends:
+            print("[warm   ] skipped (needs jax and the jax backend)")
+        else:
+            _warm_section(out, jobs, grid, horizon, n_scenarios, r_total,
+                          cells, seed)
 
     if "plan" in sections:
         t_loop = _best_of(

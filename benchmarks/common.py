@@ -9,6 +9,7 @@ choices (price law, early starts).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -19,6 +20,19 @@ from repro.engine import ScenarioSpec, as_source, make_scenarios
 
 __all__ = ["Setup", "make_setup", "sweep_min", "greedy_min",
            "argparser", "print_table"]
+
+# Reuse XLA executables across benchmark PROCESSES (DESIGN.md §11): point
+# jax's persistent compilation cache at a local directory so repeated
+# paper-table runs skip recompilation entirely. Opt out (e.g. when timing
+# cold compiles, as bench_pipeline does by not importing this module)
+# with REPRO_JAX_CACHE_DIR=0.
+if os.environ.get("REPRO_JAX_CACHE_DIR") != "0":
+    try:
+        from repro.engine import setup_persistent_cache
+
+        setup_persistent_cache()
+    except Exception:
+        pass  # jax absent or too old: benchmarks still run, just colder
 
 
 class Setup:

@@ -27,6 +27,14 @@ from repro.engine.api import (
     resolve_backend,
     resolve_plan_backend,
 )
+from repro.engine.cache import (
+    clear_caches,
+    evaluate_grid_delta,
+    jobs_fingerprint,
+    scenario_fingerprint,
+    setup_persistent_cache,
+)
+from repro.engine.cache import configure as configure_caches
 from repro.engine.mesh import ScenarioMesh, as_scenario_mesh
 from repro.engine.plan import EvalGroup, GridPlan, build_grid_plan
 from repro.engine.result import EngineResult
@@ -45,6 +53,8 @@ from repro.engine.scenarios import (
 __all__ = [
     "evaluate_grid", "evaluate_grid_chunks", "GridChunk",
     "available_backends", "resolve_backend", "resolve_plan_backend",
+    "evaluate_grid_delta", "clear_caches", "configure_caches",
+    "jobs_fingerprint", "scenario_fingerprint", "setup_persistent_cache",
     "EngineResult", "EvalGroup", "GridPlan", "build_grid_plan",
     "ScenarioMesh", "as_scenario_mesh",
     "ScenarioSpec", "ScenarioStream", "ScenarioBatch", "as_source",

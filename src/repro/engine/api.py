@@ -488,6 +488,29 @@ def evaluate_grid(
         selfowned_work[..., g.policy_idx] = sw[..., None]
         selfowned_reserved[..., g.policy_idx] = sr[..., None]
 
+    # Delta-evaluation handle: recorded whenever the inputs have a
+    # cross-call identity (fingerprintable scenarios, no availability
+    # queries) and the full (S, J, P) stack is present to splice from.
+    delta_state = None
+    if reduce == "stack" and availability is None \
+            and gplan.group_keys is not None:
+        from repro.engine import cache as _cache
+        sfp = _cache.scenario_fingerprint(scenarios)
+        if sfp is not None:
+            delta_state = {
+                "jobs_fp": gplan.jobs_fp,
+                "scenario_fp": sfp,
+                "n_scenarios": S,
+                "config": {"r_total": float(r_total), "windows": windows,
+                           "selfowned": selfowned, "pool": pool,
+                           "early_start": bool(early_start),
+                           "backend": backend,
+                           "plan_backend": gplan.plan_backend},
+                "group_rep": {key: int(g.policy_idx[0])
+                              for key, g in zip(gplan.group_keys,
+                                                gplan.groups)},
+            }
+
     total = out["spot_cost"] + out["ondemand_cost"]
     unit = total / np.maximum(gplan.workload, 1e-12)[None, :, None]
     return EngineResult(
@@ -509,7 +532,9 @@ def evaluate_grid(
         timings={"plan": gplan.plan_seconds, "pool": gplan.pool_seconds,
                  "eval": eval_total, "synth": synth_total,
                  "chunks": chunk_timings, "overlap": overlap,
+                 "plan_cached": gplan.plan_cached,
                  "plan_device": (gplan.plan_seconds
                                  if gplan.device else 0.0)},
         obs=maybe_snapshot(),
+        delta_state=delta_state,
     )

@@ -22,6 +22,17 @@ The jitted entry points live at module scope and take every plan array as
 a traced argument, so repeated ``evaluate_grid`` calls reuse the compile
 cache (one compilation per distinct batch shape, not per call).
 
+Donation note (DESIGN.md §11): the eval entry points deliberately do NOT
+use ``donate_argnums``. Their inputs are exactly the tensors the
+cross-call caches keep alive — device plan arrays in ``PLAN_CACHE``
+groups, stacked views in ``VIEW_CACHE`` — and the f32 conversions below
+are aliases (``jnp.asarray`` on an already-f32 device array is a no-op),
+so donating them would invalidate cached buffers mid-cache-lifetime.
+There is also nothing to donate INTO: no output shares a donatable
+input's shape+dtype (outputs are (S, R)-shaped cost dicts). The streamed
+regret fold in ``learn/replay.py`` is where donation pays — its
+accumulator is a genuine same-shape carry.
+
 Sharded path (DESIGN.md §9): with a ``ScenarioMesh`` the same two batch
 bodies are ``shard_map``ed over the scenario axis — stacked views arrive
 padded and sharded (``ScenarioBatch.n_rows`` rows), plan arrays are
@@ -88,7 +99,7 @@ def _task_batch_ps(A, C, starts, ends, z_t, d_eff, p_od, slot):
     return fn(A, C, z_t, d_eff)
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=8)   # bounded: one entry per live mesh
 def _sharded_fns(mesh):
     """The two batch bodies shard_map'ed over a ``ScenarioMesh``.
 

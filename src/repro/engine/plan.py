@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.obs import record_jit, span
 
+from repro.engine import cache as _cache
 from repro.core.scheduler import (
     PlanBatch,
     Policy,
@@ -146,6 +147,9 @@ class GridPlan:
     plan_seconds: float = 0.0   # window-plan tensor construction
     pool_seconds: float = 0.0   # self-owned allocation + residuals
     plan_backend: str = "host"  # "host" (numpy f64) | "device" (jit)
+    plan_cached: int = 0        # groups served from the cross-call cache
+    jobs_fp: str = ""           # content fingerprint of the job batch
+    group_keys: list | None = None  # per-group dedup signatures (cache keys)
 
     @property
     def device(self) -> bool:
@@ -201,6 +205,7 @@ class _GridStructure:
     g_akey: list[int]               # group -> akey index
     g_bid: list[float]              # group -> exact bid of its first policy
     g_pols: list[list[int]]         # group -> policy columns it fills
+    g_key: list[tuple]              # group -> full (window, b0, bid) key
 
 
 def _grid_structure(policies, r_total: int, windows: str) -> _GridStructure:
@@ -208,7 +213,7 @@ def _grid_structure(policies, r_total: int, windows: str) -> _GridStructure:
     w_index = {k: i for i, k in enumerate(key_param)}
     akey_index: dict[tuple, int] = {}
     g_index: dict[tuple, int] = {}
-    s = _GridStructure(key_param, [], [], [], [], [])
+    s = _GridStructure(key_param, [], [], [], [], [], [])
     for pi, pol in enumerate(policies):
         wkey = _window_key(pol, r_total, windows)
         b0 = None if pol.beta0 is None else round(pol.beta0, 12)
@@ -225,6 +230,7 @@ def _grid_structure(policies, r_total: int, windows: str) -> _GridStructure:
             s.g_akey.append(ai)
             s.g_bid.append(pol.bid)
             s.g_pols.append([pi])
+            s.g_key.append(gkey)
         else:
             s.g_pols[gi].append(pi)
     return s
@@ -286,50 +292,102 @@ def build_grid_plan(
 
     structure = _grid_structure(policies, r_total, windows)
     arrays = job_arrays(jobs)
+    jobs_fp = _cache.fingerprint_job_arrays(arrays)
+    # Availability queries are opaque host callables — their results have
+    # no fingerprint, so refined plans never enter the cross-call cache.
+    use_cache = availability is None and _cache.enabled()
     if plan_backend == "device":
         return _build_grid_plan_device(jobs, policies, structure, arrays,
                                        r_total, windows, selfowned,
-                                       availability)
+                                       availability, jobs_fp=jobs_fp,
+                                       use_cache=use_cache)
     return _build_grid_plan_host(jobs, policies, structure, arrays, r_total,
                                  windows, selfowned, pool, availability,
-                                 slots_per_unit)
+                                 slots_per_unit, jobs_fp=jobs_fp,
+                                 use_cache=use_cache)
+
+
+def _cache_lookup(s: _GridStructure, base: tuple, use_cache: bool):
+    """Consult the cross-call group cache: {group index -> cached record}
+    plus the miss list, with hit/miss counters emitted. The miss set
+    drives SUBSET builds below — only the window plans and allocations
+    the missing groups actually need are recomputed, and building a
+    subset of the Dealloc parameters is bit-identical to building all of
+    them (``build_plans_batch`` vectorizes per parameter)."""
+    cached: dict[int, EvalGroup] = {}
+    if use_cache:
+        for gi in range(len(s.g_bid)):
+            rec = _cache.PLAN_CACHE.get((base, s.g_key[gi]))
+            if rec is not None:
+                cached[gi] = rec
+        _cache.plan_cache_events(hits=len(cached),
+                                 misses=len(s.g_bid) - len(cached))
+    miss = [gi for gi in range(len(s.g_bid)) if gi not in cached]
+    return cached, miss
 
 
 def _build_grid_plan_host(jobs, policies, s: _GridStructure, arrays, r_total,
                           windows, selfowned, pool, availability,
-                          slots_per_unit) -> GridPlan:
+                          slots_per_unit, jobs_fp: str = "",
+                          use_cache: bool = False) -> GridPlan:
+    base = (jobs_fp, float(r_total), windows, selfowned, pool,
+            int(slots_per_unit), "host")
+    cached, miss = _cache_lookup(s, base, use_cache)
+    need_ai = sorted({s.g_akey[gi] for gi in miss})
+    need_w = sorted({s.a_plan[ai] for ai in need_ai})
+    w_pos = {w: i for i, w in enumerate(need_w)}
+    params = list(s.key_param.values())
+
+    # Spans are emitted even on an all-hit call: timings["plan"/"pool"]
+    # must stay the same floats as the span tracer's totals (test_obs).
     with span("plan", plan_backend="host", windows=windows,
-              n_plans=len(s.key_param)) as sp:
-        if windows == "even":
+              n_plans=len(need_w), n_cached=len(cached)) as sp:
+        if not need_w:
+            built: list[PlanBatch] = []
+        elif windows == "even":
             built = build_plans_batch(jobs, windows="even", arrays=arrays)
         else:
-            built = build_plans_batch(jobs, list(s.key_param.values()),
+            built = build_plans_batch(jobs, [params[w] for w in need_w],
                                       windows="dealloc", arrays=arrays)
     plan_seconds = sp.seconds
 
     with span("pool", plan_backend="host", pool=pool,
-              n_groups=len(s.g_bid)) as sp:
-        alloc: list[np.ndarray] = [
-            _group_alloc(built[s.a_plan[ai]], s.a_beta0[ai], r_total,
-                         selfowned, pool, availability, slots_per_unit)
-            for ai in range(len(s.a_plan))]
+              n_groups=len(miss)) as sp:
+        alloc: dict[int, np.ndarray] = {
+            ai: _group_alloc(built[w_pos[s.a_plan[ai]]], s.a_beta0[ai],
+                             r_total, selfowned, pool, availability,
+                             slots_per_unit)
+            for ai in need_ai}
         groups: list[EvalGroup] = []
         for gi in range(len(s.g_bid)):
+            rec = cached.get(gi)
+            if rec is not None:
+                # The cached record keeps ITS exact bid: two bids rounding
+                # to the same 12-decimal key are one group, in-grid and
+                # cross-call alike, so the hit is bitwise.
+                groups.append(dataclasses.replace(
+                    rec, policy_idx=np.asarray(s.g_pols[gi])))
+                continue
             ai = s.g_akey[gi]
-            plan = built[s.a_plan[ai]]
+            plan = built[w_pos[s.a_plan[ai]]]
             r_alloc = alloc[ai]
             z_t, d_eff, pins, so_work, so_res = _cloud_residuals(plan,
                                                                  r_alloc)
-            groups.append(EvalGroup(
+            g = EvalGroup(
                 plan=plan, policy_idx=np.asarray(s.g_pols[gi]),
                 bid=s.g_bid[gi], r_alloc=r_alloc, z_t=z_t, d_eff=d_eff,
-                pins=pins, selfowned_work=so_work, selfowned_reserved=so_res))
+                pins=pins, selfowned_work=so_work, selfowned_reserved=so_res)
+            groups.append(g)
+            if use_cache:
+                _cache.PLAN_CACHE.put((base, s.g_key[gi]), g)
     pool_seconds = sp.seconds
     return GridPlan(jobs=jobs, policies=policies, groups=groups,
-                    workload=built[0].workload, arrival=built[0].arrival,
+                    workload=arrays.z.sum(axis=1), arrival=arrays.arrival,
                     n_jobs=len(jobs), n_policies=len(policies),
-                    L=built[0].z.shape[1], plan_seconds=plan_seconds,
-                    pool_seconds=pool_seconds, plan_backend="host")
+                    L=arrays.z.shape[1], plan_seconds=plan_seconds,
+                    pool_seconds=pool_seconds, plan_backend="host",
+                    plan_cached=len(cached), jobs_fp=jobs_fp,
+                    group_keys=list(s.g_key))
 
 
 def _group_alloc(plan: PlanBatch, pol_beta0: float | None, r_total: int,
@@ -366,7 +424,7 @@ def _group_alloc(plan: PlanBatch, pol_beta0: float | None, r_total: int,
 # Device plan path: jobs -> plan tensors as ONE fused jit program.
 # --------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=16)   # bounded: one entry per mode pair
 def _device_plan_fns(selfowned_mode: str, windows: str):
     """Jitted device builders, cached per (self-owned mode, window mode).
 
@@ -438,8 +496,9 @@ def _device_plan_fns(selfowned_mode: str, windows: str):
 
 
 def _build_grid_plan_device(jobs, policies, s: _GridStructure, arrays,
-                            r_total, windows, selfowned,
-                            availability) -> GridPlan:
+                            r_total, windows, selfowned, availability,
+                            jobs_fp: str = "",
+                            use_cache: bool = False) -> GridPlan:
     import jax
     import jax.numpy as jnp
 
@@ -455,47 +514,38 @@ def _build_grid_plan_device(jobs, policies, s: _GridStructure, arrays,
             bad = xs[(xs <= 0.0) | (xs > 1.0)][0]
             raise ValueError(f"Dealloc parameter must be in (0, 1], got {bad}")
     fns = _device_plan_fns(selfowned, windows)
+
+    if availability is None or r_total <= 0:
+        return _device_query_free(jobs, policies, s, arrays, r_total,
+                                  windows, selfowned, xs, fns, jobs_fp,
+                                  use_cache)
     plan_of_akey = np.asarray(s.a_plan, np.int32)
     b0 = np.asarray([np.nan if b is None else b for b in s.a_beta0])
     akey_of_group = np.asarray(s.g_akey, np.int32)
-
-    if availability is None or r_total <= 0:
-        full_args = (arrays.e, arrays.delta, arrays.mask, arrays.omega,
-                     arrays.arrival, arrays.z, xs, plan_of_akey, b0,
-                     float(max(r_total, 0)), akey_of_group)
-        record_jit("plan.device.full", fns["full"], *full_args)
-        with span("plan", plan_backend="device", windows=windows) as sp:
-            # The fused program: no host staging between windows and
-            # residuals.
-            out = jax.block_until_ready(fns["full"](*full_args))
-        (starts, ends), parts = out[:2], out[2:]
-        plan_seconds = sp.seconds
-        pool_seconds = 0.0
-    else:
-        plans_args = (arrays.e, arrays.delta, arrays.mask, arrays.omega,
-                      arrays.arrival, xs)
-        record_jit("plan.device.plans", fns["plans"], *plans_args)
-        with span("plan", plan_backend="device", windows=windows) as sp:
-            sizes, starts, ends = jax.block_until_ready(
-                fns["plans"](*plans_args))
-        plan_seconds = sp.seconds
-        # Availability queries are host callables: stage the planned windows
-        # out once, query per distinct (plan, beta_0) cell, ship back.
-        with span("pool", plan_backend="device") as sp:
-            h_starts, h_ends = np.asarray(starts), np.asarray(ends)
-            if isinstance(availability, (list, tuple)):
-                avail = np.stack([[q(h_starts[p], h_ends[p])
-                                   for q in availability]
-                                  for p in plan_of_akey])
-            else:
-                avail = np.stack([availability(h_starts[p], h_ends[p])
-                                  for p in plan_of_akey])
-            group_args = (arrays.z, arrays.delta, arrays.mask, sizes,
-                          plan_of_akey, b0, jnp.asarray(avail),
-                          akey_of_group)
-            record_jit("plan.device.groups", fns["groups"], *group_args)
-            parts = jax.block_until_ready(fns["groups"](*group_args))
-        pool_seconds = sp.seconds
+    plans_args = (arrays.e, arrays.delta, arrays.mask, arrays.omega,
+                  arrays.arrival, xs)
+    record_jit("plan.device.plans", fns["plans"], *plans_args)
+    with span("plan", plan_backend="device", windows=windows) as sp:
+        sizes, starts, ends = jax.block_until_ready(
+            fns["plans"](*plans_args))
+    plan_seconds = sp.seconds
+    # Availability queries are host callables: stage the planned windows
+    # out once, query per distinct (plan, beta_0) cell, ship back.
+    with span("pool", plan_backend="device") as sp:
+        h_starts, h_ends = np.asarray(starts), np.asarray(ends)
+        if isinstance(availability, (list, tuple)):
+            avail = np.stack([[q(h_starts[p], h_ends[p])
+                               for q in availability]
+                              for p in plan_of_akey])
+        else:
+            avail = np.stack([availability(h_starts[p], h_ends[p])
+                              for p in plan_of_akey])
+        group_args = (arrays.z, arrays.delta, arrays.mask, sizes,
+                      plan_of_akey, b0, jnp.asarray(avail),
+                      akey_of_group)
+        record_jit("plan.device.groups", fns["groups"], *group_args)
+        parts = jax.block_until_ready(fns["groups"](*group_args))
+    pool_seconds = sp.seconds
 
     nan = np.full(len(jobs), np.nan)
     dev_plans = [PlanBatch(arrival=arrays.arrival, starts=starts[w],
@@ -519,4 +569,86 @@ def _build_grid_plan_device(jobs, policies, s: _GridStructure, arrays,
                     workload=arrays.z.sum(axis=1), arrival=arrays.arrival,
                     n_jobs=len(jobs), n_policies=len(policies),
                     L=arrays.z.shape[1], plan_seconds=plan_seconds,
-                    pool_seconds=pool_seconds, plan_backend="device")
+                    pool_seconds=pool_seconds, plan_backend="device",
+                    jobs_fp=jobs_fp, group_keys=list(s.g_key))
+
+
+def _device_query_free(jobs, policies, s: _GridStructure, arrays, r_total,
+                       windows, selfowned, xs, fns, jobs_fp: str,
+                       use_cache: bool) -> GridPlan:
+    """The default (query-free) device plan path, cache-aware.
+
+    Misses run through the SAME fused jit program as before, over the
+    SUBSET of window params / akeys / groups they need — on a cold cache
+    the subset is the full grid, so the traced shapes (and therefore the
+    compiled programs) are identical to the uncached path. On an all-hit
+    call no device program runs at all.
+    """
+    import jax
+
+    base = (jobs_fp, float(r_total), windows, selfowned, "device")
+    cached, miss = _cache_lookup(s, base, use_cache)
+    need_ai = sorted({s.g_akey[gi] for gi in miss})
+    ai_pos = {ai: i for i, ai in enumerate(need_ai)}
+    need_w = sorted({s.a_plan[ai] for ai in need_ai})
+    w_pos = {w: i for i, w in enumerate(need_w)}
+    if windows == "even":
+        xs_sub = xs                         # per-job slack, single plan
+    else:
+        xs_sub = xs[np.asarray(need_w, np.intp)]
+    plan_of_akey = np.asarray([w_pos[s.a_plan[ai]] for ai in need_ai],
+                              np.int32)
+    b0 = np.asarray([np.nan if s.a_beta0[ai] is None else s.a_beta0[ai]
+                     for ai in need_ai])
+    akey_of_group = np.asarray([ai_pos[s.g_akey[gi]] for gi in miss],
+                               np.int32)
+
+    if miss:
+        full_args = (arrays.e, arrays.delta, arrays.mask, arrays.omega,
+                     arrays.arrival, arrays.z, xs_sub, plan_of_akey, b0,
+                     float(max(r_total, 0)), akey_of_group)
+        record_jit("plan.device.full", fns["full"], *full_args)
+    with span("plan", plan_backend="device", windows=windows,
+              n_cached=len(cached)) as sp:
+        if miss:
+            # The fused program: no host staging between windows and
+            # residuals.
+            out = jax.block_until_ready(fns["full"](*full_args))
+    plan_seconds = sp.seconds
+
+    new_groups: dict[int, EvalGroup] = {}
+    if miss:
+        (starts, ends), parts = out[:2], out[2:]
+        nan = np.full(len(jobs), np.nan)
+        dev_plans = [PlanBatch(arrival=arrays.arrival, starts=starts[i],
+                               ends=ends[i], z=arrays.z, delta=arrays.delta,
+                               mask=arrays.mask, bid=nan, beta0=nan)
+                     for i in range(starts.shape[0])]
+        r_g, z_t_g, d_eff_g, pins_g, so_w_g, so_r_g = parts
+        # The self-owned stats are consumed host-side only (the
+        # EngineResult scatter); ship the two small stacks across once
+        # here instead of one device sync per group later. Everything the
+        # cost kernels read (ends/starts, z_t, d_eff, pins) stays on
+        # device.
+        so_w_g, so_r_g = np.asarray(so_w_g), np.asarray(so_r_g)
+        for k, gi in enumerate(miss):
+            g = EvalGroup(plan=dev_plans[w_pos[s.a_plan[s.g_akey[gi]]]],
+                          policy_idx=np.asarray(s.g_pols[gi]),
+                          bid=s.g_bid[gi], r_alloc=r_g[k], z_t=z_t_g[k],
+                          d_eff=d_eff_g[k], pins=pins_g[k],
+                          selfowned_work=so_w_g[k],
+                          selfowned_reserved=so_r_g[k])
+            new_groups[gi] = g
+            if use_cache:
+                _cache.PLAN_CACHE.put((base, s.g_key[gi]), g)
+    groups = [
+        dataclasses.replace(cached[gi], policy_idx=np.asarray(s.g_pols[gi]))
+        if gi in cached else new_groups[gi]
+        for gi in range(len(s.g_bid))]
+    return GridPlan(jobs=jobs, policies=policies, groups=groups,
+                    workload=arrays.z.sum(axis=1), arrival=arrays.arrival,
+                    n_jobs=len(jobs), n_policies=len(policies),
+                    L=arrays.z.shape[1], plan_seconds=plan_seconds,
+                    pool_seconds=0.0, plan_backend="device",
+                    plan_cached=len(cached), jobs_fp=jobs_fp,
+                    group_keys=list(s.g_key))

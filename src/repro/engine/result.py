@@ -55,6 +55,13 @@ class EngineResult:
     # Observability snapshot ({"metrics": ..., "compiled": ...}) captured
     # when an ``repro.obs`` collection context was active; None otherwise.
     obs: dict | None = None
+    # Delta-evaluation handle (DESIGN.md §11): the jobs/scenario
+    # fingerprints, resolved config and per-group dedup signatures this
+    # result was computed under, consumed by ``evaluate_grid_delta`` to
+    # re-score only changed groups. None when the inputs have no
+    # cross-call identity (adaptive streams, availability queries,
+    # reduce="mean").
+    delta_state: dict | None = None
 
     @property
     def n_scenarios(self) -> int:

@@ -420,7 +420,7 @@ def _device_synth_fn(spec: ScenarioSpec, mesh=None):
                              in_specs=(dp, dp, dp, dp), out_specs=dp))
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=32)   # bounded: one entry per (slot, mesh)
 def _device_views_fn(slot: float, mesh=None):
     """Jitted (levels, prices, spike, thresholds) -> stacked (A, C) views.
 
@@ -523,13 +523,32 @@ class ScenarioBatch:
     def stacked(self, bid: float):
         key = _bid_key(bid)
         if key not in self._stacked:
-            A, C = self._build_views(bid)
-            if self.mesh is not None and isinstance(A, np.ndarray):
-                # Host-built views under a mesh: pad + place sharded once,
-                # here, so every backend consumes one layout.
-                A, C = self.mesh.put_rows(A), self.mesh.put_rows(C)
-            self._stacked[key] = (A, C)
+            from repro.engine import cache as _cache
+
+            # Cross-call reuse (DESIGN.md §11): batches whose views are a
+            # pure function of (spec, chunk range, bid) publish a cache
+            # key and survive the batch; feedback-driven chunks and meshed
+            # batches return None and keep the per-batch memo only.
+            ck = self._view_key(bid) if _cache.enabled() else None
+            views = _cache.VIEW_CACHE.get(ck) if ck is not None else None
+            if views is None:
+                A, C = self._build_views(bid)
+                if self.mesh is not None and isinstance(A, np.ndarray):
+                    # Host-built views under a mesh: pad + place sharded
+                    # once, here, so every backend consumes one layout.
+                    A, C = self.mesh.put_rows(A), self.mesh.put_rows(C)
+                views = (A, C)
+                if ck is not None:
+                    _cache.VIEW_CACHE.put(ck, views)
+            self._stacked[key] = views
         return self._stacked[key]
+
+    def _view_key(self, bid: float):
+        """Cross-call identity of this chunk's per-bid views, or None when
+        they have none (materialized market lists would need a content
+        hash per call; feedback-driven synthesis depends on state outside
+        any key; meshed tensors are placed for one device topology)."""
+        return None
 
     def _build_views(self, bid: float):
         raise NotImplementedError
@@ -666,6 +685,15 @@ class SynthBatch(ScenarioBatch):
                                             periods=self._periods,
                                             offsets=self._offsets)]
         return self._markets
+
+    def _view_key(self, bid: float):
+        if self.mesh is not None or self._periods is not None \
+                or self._offsets is not None:
+            # Explicit periods/offsets mean an adaptive adversary planned
+            # this chunk from feedback — no cross-call identity.
+            return None
+        return (self.spec, self.start, self.stop, self.device,
+                _bid_key(bid))
 
     def _build_views(self, bid: float):
         if not self.device:

@@ -12,6 +12,7 @@ lowers for the ``decode_*`` cells.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -82,6 +83,17 @@ def main(argv=None):
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--max-new", type=int, default=16)
     args = p.parse_args(argv)
+    # Serving restarts should not re-pay prefill/decode compiles: hook up
+    # jax's persistent compilation cache (DESIGN.md §11) before any jit.
+    if os.environ.get("REPRO_JAX_CACHE_DIR") != "0":
+        try:
+            from repro.engine.cache import setup_persistent_cache
+
+            cache_dir = setup_persistent_cache()
+            if cache_dir:
+                print(f"[serve] persistent compilation cache: {cache_dir}")
+        except Exception:
+            pass
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (args.requests, args.prompt_len),

@@ -33,6 +33,7 @@ from contextvars import ContextVar
 
 __all__ = [
     "CompiledRegistry",
+    "CompileWatch",
     "capture",
     "capturing",
     "collective_counts",
@@ -157,9 +158,10 @@ def capturing():
     return _CAPTURE.get() is not None
 
 
-# lru_cache'd compiled-fn factories across the stack, snapshotted for the
-# per-cache-key hit/miss counters.  Imported lazily: jax (and the engine)
-# may be absent or expensive, and obs must stay import-light.
+# lru_cache'd compiled-fn factories across the stack, plus the cross-call
+# plan/view caches of ``repro.engine.cache``, snapshotted for the
+# per-cache-key hit/miss/eviction counters.  Imported lazily: jax (and the
+# engine) may be absent or expensive, and obs must stay import-light.
 _FACTORIES = (
     ("scenarios.synth_fn", "repro.engine.scenarios", "_device_synth_fn"),
     ("scenarios.views_fn", "repro.engine.scenarios", "_device_views_fn"),
@@ -167,11 +169,21 @@ _FACTORIES = (
     ("engine.sharded_fns", "repro.engine.backend_jax", "_sharded_fns"),
     ("learn.scan", "repro.learn.replay", "_compiled_scan"),
     ("learn.fold", "repro.learn.replay", "_sharded_fold"),
+    ("engine.plan_cache", "repro.engine.cache", "PLAN_CACHE"),
+    ("engine.view_cache", "repro.engine.cache", "VIEW_CACHE"),
 )
 
 
 def factory_caches():
-    """{name: {hits, misses, currsize}} for each compiled-fn lru cache."""
+    """{name: {hits, misses, maxsize, currsize, evictions}} per cache.
+
+    Every registered cache duck-types ``functools.lru_cache``'s
+    ``cache_info()``.  Evictions are exact where the cache keeps a counter
+    (the cross-call ``_LRU`` caches); for plain ``lru_cache`` factories
+    they are the ``misses - currsize`` lower bound (every miss inserts, so
+    anything not resident was evicted — exact as long as the cache was
+    never cleared mid-run).
+    """
     import importlib
     import sys
 
@@ -188,5 +200,67 @@ def factory_caches():
         if info is None:
             continue
         ci = info()
-        out[name] = {"hits": ci.hits, "misses": ci.misses, "currsize": ci.currsize}
+        out[name] = {
+            "hits": ci.hits,
+            "misses": ci.misses,
+            "maxsize": ci.maxsize,
+            "currsize": ci.currsize,
+            "evictions": getattr(fn, "evictions",
+                                 max(ci.misses - ci.currsize, 0)),
+        }
     return out
+
+
+class CompileWatch:
+    """Count ACTUAL XLA backend compilations over a scope.
+
+    ``jax.monitoring`` fires ``/jax/core/compile/backend_compile_duration``
+    once per real backend compile and NOT on jit-cache hits, so this is
+    the ground truth for "the warm path ran with zero compiles" — the
+    cache-smoke CI gate (``bench_pipeline --only warm``).  Listeners
+    cannot be deregistered individually on current jax, so one
+    process-wide listener is installed on first use and watches are
+    scoped by counting against a baseline.
+
+        watch = CompileWatch()
+        with watch:
+            run_warm_path()
+        assert watch.compiles == 0
+
+    Degrades to counting nothing (and reporting ``supported=False``) when
+    jax or its monitoring hooks are absent.
+    """
+
+    _installed = False
+    _count = 0
+    _EVENT = "/jax/core/compile/backend_compile_duration"
+
+    @classmethod
+    def _install(cls) -> bool:
+        if cls._installed:
+            return True
+        try:
+            import jax.monitoring as monitoring
+
+            def _listener(name, secs, **kw):
+                if name == cls._EVENT:
+                    cls._count += 1
+
+            monitoring.register_event_duration_secs_listener(_listener)
+        except Exception:
+            return False
+        cls._installed = True
+        return True
+
+    def __init__(self):
+        self.supported = self._install()
+        self._base = 0
+        self.compiles = 0
+
+    def __enter__(self):
+        self._base = type(self)._count
+        return self
+
+    def __exit__(self, *exc):
+        self.compiles = type(self)._count - self._base
+        return False

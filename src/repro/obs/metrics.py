@@ -16,6 +16,14 @@ and learner record:
 * ``learn.weight_entropy`` histogram, label ``learner`` — Shannon entropy
   (nats) of the learner's mean weight posterior per streamed chunk, and
   ``learn.top_weight`` gauge — the heaviest expert's share.
+* ``engine.plan_cache`` counter, label ``event={hit,miss,evict}`` — the
+  cross-call grid-plan cache (``repro.engine.cache.PLAN_CACHE``): one
+  ``hit``/``miss`` per eval group looked up during ``build_grid_plan``,
+  one ``evict`` per LRU ejection; ``engine.view_cache`` mirrors it for
+  cached ``ScenarioBatch.stacked`` views.
+* ``engine.delta_groups_rescored`` counter — eval groups actually
+  re-scored by :func:`repro.engine.cache.evaluate_grid_delta` (the
+  unchanged remainder was spliced from the previous result).
 
 Snapshots (:meth:`MetricsRegistry.snapshot`) are plain JSON-able dicts
 attached to ``EngineResult.obs`` / ``StreamLearnResult.obs`` and dumped

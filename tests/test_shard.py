@@ -330,7 +330,8 @@ def test_synth_program_has_zero_collectives():
 def test_fold_program_has_exactly_one_allreduce():
     # replay_stream's sharded fold: every per-learner sum rides ONE packed
     # psum — exactly one all-reduce per chunk, and no other collective.
-    from repro.learn.replay import _event_ring, _sharded_fold, build_events
+    from repro.learn.replay import (_event_ring, _sharded_fold, build_events,
+                                    fold_acc_size)
 
     jobs, _ = _setup()
     mesh = ScenarioMesh.create()
@@ -340,7 +341,8 @@ def test_fold_program_has_exactly_one_allreduce():
     ev_kind, ev_j, _ = build_events(arrivals, d)
     fold_fn = _sharded_fold(mesh, (("hedge", 1),), _event_ring(ev_kind), 0)
     J, P = len(jobs), len(GRID)
-    args = (jnp.zeros((2 * n, J, P), jnp.float32),
+    args = (jnp.zeros(fold_acc_size(1, J, P), jnp.float32),
+            jnp.zeros((2 * n, J, P), jnp.float32),
             jnp.zeros((2 * n, J), jnp.float32),
             jnp.ones(2 * n, bool), jnp.zeros((1, J), jnp.float32),
             jnp.zeros((1, J), jnp.float32), jnp.asarray(ev_kind),
