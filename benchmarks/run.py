@@ -54,8 +54,8 @@ def main(argv=None):
                    help="small streams / reduced grids for CI-speed runs")
     sections = ["exp1", "exp2", "exp3", "exp4", "engine", "pipeline",
                 "learn", "obs", "roofline"]
-    p.add_argument("--skip", nargs="*", default=[], choices=sections)
-    p.add_argument("--only", nargs="*", default=None, choices=sections)
+    p.add_argument("--skip", nargs="*", default=[], metavar="SECTION")
+    p.add_argument("--only", nargs="*", default=None, metavar="SECTION")
     p.add_argument("--mesh", type=int, default=None,
                    help="shard the exp1-4 scenario axis over an N-way "
                         "device mesh (forwarded as --mesh N)")
@@ -63,6 +63,12 @@ def main(argv=None):
                    help="trace the whole run with the repro.obs span "
                         "tracer and save the Chrome/Perfetto JSON here")
     args = p.parse_args(argv)
+
+    for flag, values in (("--only", args.only), ("--skip", args.skip)):
+        unknown = [v for v in (values or []) if v not in sections]
+        if unknown:
+            p.error(f"{flag}: unknown section(s): {', '.join(unknown)}. "
+                    f"Valid sections: {', '.join(sections)}")
 
     n_jobs = args.jobs or (300 if args.quick else 1500)
     types = [1, 2] if args.quick else [1, 2, 3, 4]

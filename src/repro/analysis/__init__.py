@@ -1,0 +1,27 @@
+"""repro.analysis — static contract checker for the jobs->cost->regret
+array program (DESIGN.md §12).
+
+Two layers:
+
+- **Layer 1** (``rules``/``engine``): stdlib-``ast`` source rules
+  ``RPR0xx`` over the written invariants — timing, cache bounds, f64
+  discipline, named epsilon guards, host-sync, donation whitelist,
+  callback-free hot path. No code execution, no jax required.
+- **Layer 2** (``programs``): the compiled-program verifier —
+  abstract-traces the registered jit factories and pallas launchers on
+  canonical shapes and asserts the §9 placement contract, callback- and
+  f64-free jaxprs, donation aliasing validity and weak-type hygiene.
+
+CLI: ``python -m repro.analysis [--format text|json]
+[--baseline analysis-baseline.json] [--programs] [paths...]``;
+exits 0 (clean) / 1 (findings) / 2 (internal error).
+"""
+
+from .engine import (Baseline, analyze_source, load_baseline,
+                     run_source_analysis)
+from .rules import RULES, RULES_BY_CODE, Finding
+
+__all__ = [
+    "Baseline", "Finding", "RULES", "RULES_BY_CODE", "analyze_source",
+    "load_baseline", "run_source_analysis",
+]

@@ -1,0 +1,489 @@
+"""Source-level contract rules (Layer 1): ``RPR0xx`` over stdlib ASTs.
+
+Each rule machine-checks one invariant that previously lived only in
+DESIGN.md prose (the section references below). Rules never execute repo
+code — they parse with :mod:`ast` and walk the tree — so the linter is
+safe to run anywhere, including CI boxes without jax.
+
+Rule catalogue (DESIGN.md §12 is the prose twin of this table):
+
+========  ==================================================================
+RPR001    no ad-hoc wall-clock timing (``time.perf_counter``/``time.time``/
+          ``time.monotonic``) outside ``obs/trace.py`` — spans are the
+          timing source (§10)
+RPR002    no unbounded ``functools.lru_cache``/``functools.cache`` — every
+          factory cache carries an explicit ``maxsize`` bound (§11)
+RPR003    no float64 on the device path: ``jnp.float64`` anywhere in a
+          device-path module, or any ``float64`` reference inside a
+          jit-reachable function (§6 — f32 is the device dtype, the f64
+          oracle lives on the host side of the same modules)
+RPR004    float comparisons against small epsilon literals in the
+          knife-edge modules must go through a NAMED guard
+          (``FLEX_REL``/``_DEVICE_CEIL_EPS``/... — §5/§6)
+RPR005    no host sync (``.item()``/``.tolist()``/``np.asarray``/
+          ``block_until_ready``) inside functions reachable from a
+          ``jax.jit`` factory (intra-module call graph)
+RPR006    ``donate_argnums`` only in the §11-whitelisted modules
+RPR007    no ``pure_callback``/``io_callback``/``debug_callback``/
+          ``jax.debug.print`` in device-path modules (§9 — hot-path
+          programs must stay callback-free)
+========  ==================================================================
+
+Suppression: a trailing ``# repro: noqa RPR0xx`` on the finding's line, or
+a baseline entry in ``analysis-baseline.json`` (see ``engine.py``).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+
+__all__ = ["Finding", "Rule", "RULES", "RULES_BY_CODE"]
+
+
+# --------------------------------------------------------------------------
+# Module classification (repo-relative paths with forward slashes)
+# --------------------------------------------------------------------------
+
+TIMING_SOURCE = "src/repro/obs/trace.py"
+
+# The §6 device path: modules whose traced functions feed XLA programs.
+DEVICE_PATH_FILES = frozenset({
+    "src/repro/engine/backend_jax.py",
+    "src/repro/engine/backend_pallas.py",
+    "src/repro/engine/scenarios.py",
+    "src/repro/learn/replay.py",
+})
+DEVICE_PATH_PREFIXES = ("src/repro/kernels/",)
+
+# The §5/§6 knife-edge modules: every epsilon tolerance is a named guard.
+GUARDED_FILES = frozenset({
+    "src/repro/core/simulate.py",
+    "src/repro/core/scheduler.py",
+    "src/repro/core/dealloc.py",
+})
+
+# §11: the only module whose donation is proven safe (the fold's
+# accumulator carry); everything else must not donate.
+DONATION_WHITELIST = frozenset({"src/repro/learn/replay.py"})
+
+# The documented epsilon guards plus the shape every new guard must take
+# (a module-level SHOUTING_CASE constant, optional leading underscore).
+KNOWN_GUARDS = frozenset({
+    "FLEX_REL", "FLEX_ABS", "_DEVICE_CEIL_EPS", "_DEVICE_DUST",
+    "_avail_threshold",
+})
+_NAMED_GUARD_RE = re.compile(r"^_?[A-Z][A-Z0-9_]{2,}$")
+
+_TIMER_NAMES = frozenset({
+    "perf_counter", "perf_counter_ns", "time", "monotonic", "monotonic_ns",
+    "process_time", "process_time_ns",
+})
+
+_JIT_WRAPPERS = frozenset({
+    "jit", "shard_map", "vmap", "pmap", "scan", "pallas_call", "remat",
+    "checkpoint", "grad", "value_and_grad", "custom_vjp", "custom_jvp",
+})
+
+_CALLBACKS = frozenset({"pure_callback", "io_callback", "debug_callback"})
+
+
+def _in_device_path(rel: str) -> bool:
+    return rel in DEVICE_PATH_FILES or rel.startswith(DEVICE_PATH_PREFIXES)
+
+
+def _in_library(rel: str) -> bool:
+    return rel.startswith("src/repro/")
+
+
+# --------------------------------------------------------------------------
+# Finding / Rule containers
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+    line_text: str = ""
+
+    @property
+    def location(self) -> str:
+        return f"{self.path}:{self.line}"
+
+    def to_dict(self) -> dict:
+        return {"code": self.code, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message,
+                "line_text": self.line_text}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    code: str
+    name: str
+    contract: str
+    applies: "callable"
+    check: "callable"
+
+
+def _terminal(node: ast.AST) -> str | None:
+    """Rightmost identifier of a Name/Attribute chain (``a.b.c`` -> "c")."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _mk(code, node, message, lines, path) -> Finding:
+    line = getattr(node, "lineno", 1)
+    text = lines[line - 1].strip() if 0 < line <= len(lines) else ""
+    return Finding(code=code, path=path, line=line,
+                   col=getattr(node, "col_offset", 0), message=message,
+                   line_text=text)
+
+
+# --------------------------------------------------------------------------
+# RPR001 — timing outside obs/trace.py
+# --------------------------------------------------------------------------
+
+def _check_timing(tree, lines, path):
+    out = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "time" and node.attr in _TIMER_NAMES):
+            out.append(_mk(
+                "RPR001", node,
+                f"ad-hoc wall-clock timing time.{node.attr} outside "
+                f"obs/trace.py — measure with repro.obs.span (§10)",
+                lines, path))
+        elif (isinstance(node, ast.ImportFrom) and node.module == "time"
+                and any(a.name in _TIMER_NAMES for a in node.names)):
+            out.append(_mk(
+                "RPR001", node,
+                "importing wall-clock timers from `time` outside "
+                "obs/trace.py — measure with repro.obs.span (§10)",
+                lines, path))
+    return out
+
+
+# --------------------------------------------------------------------------
+# RPR002 — unbounded caches
+# --------------------------------------------------------------------------
+
+def _lru_maxsize_unbounded(call: ast.Call) -> bool:
+    """True if an ``lru_cache(...)`` call has no finite maxsize."""
+    for kw in call.keywords:
+        if kw.arg == "maxsize":
+            return isinstance(kw.value, ast.Constant) and kw.value.value is None
+    if call.args:
+        a = call.args[0]
+        return isinstance(a, ast.Constant) and a.value is None
+    return True  # lru_cache() with no args defaults to maxsize=128 — bounded
+    # (unreached: handled below)
+
+
+def _check_unbounded_cache(tree, lines, path):
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _terminal(node.func) == "lru_cache":
+            unbounded = False
+            for kw in node.keywords:
+                if kw.arg == "maxsize" and isinstance(kw.value, ast.Constant) \
+                        and kw.value.value is None:
+                    unbounded = True
+            if node.args and isinstance(node.args[0], ast.Constant) \
+                    and node.args[0].value is None:
+                unbounded = True
+            if unbounded:
+                out.append(_mk(
+                    "RPR002", node,
+                    "unbounded lru_cache(maxsize=None) — long-lived "
+                    "processes must not accumulate entries forever; give "
+                    "it an explicit bound (§11)", lines, path))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                t = _terminal(dec) if not isinstance(dec, ast.Call) else None
+                if t == "lru_cache":
+                    out.append(_mk(
+                        "RPR002", dec,
+                        "bare @lru_cache is unbounded — give it an "
+                        "explicit maxsize bound (§11)", lines, path))
+                elif t == "cache":
+                    out.append(_mk(
+                        "RPR002", dec,
+                        "@functools.cache is unbounded — use "
+                        "lru_cache(maxsize=N) (§11)", lines, path))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Shared: intra-module call graph from jit factories (RPR003b / RPR005)
+# --------------------------------------------------------------------------
+
+def _own_nodes(fn: ast.AST):
+    """Walk a function's own body, not descending into nested defs."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _jit_reachable(tree) -> list[ast.AST]:
+    """Function nodes reachable from a jax.jit/shard_map/vmap/... root.
+
+    A lightweight intra-module over-approximation: roots are functions
+    whose NAME appears inside a jit-wrapper call (``jax.jit(f)``,
+    ``shard_map(f, ...)``, ``lax.scan(step, ...)``) or that carry a jit
+    decorator; edges are any Name reference to another module function.
+    """
+    funcs: dict[str, list[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            funcs.setdefault(node.name, []).append(node)
+
+    roots: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _terminal(node.func) in _JIT_WRAPPERS:
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Name) and sub.id in funcs:
+                    roots.add(sub.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if any(_terminal(d) == "jit" for d in ast.walk(dec)
+                       if isinstance(d, (ast.Name, ast.Attribute))):
+                    roots.add(node.name)
+
+    edges: dict[str, set[str]] = {}
+    for name, nodes in funcs.items():
+        refs: set[str] = set()
+        for fn in nodes:
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Name) and sub.id in funcs \
+                        and sub.id != name:
+                    refs.add(sub.id)
+        edges[name] = refs
+
+    seen: set[str] = set()
+    frontier = list(roots & funcs.keys())
+    while frontier:
+        name = frontier.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        frontier.extend(edges.get(name, ()))
+    return [fn for name in sorted(seen) for fn in funcs[name]]
+
+
+# --------------------------------------------------------------------------
+# RPR003 — float64 on the device path
+# --------------------------------------------------------------------------
+
+def _check_float64(tree, lines, path):
+    out = []
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Attribute) and node.attr == "float64"
+                and isinstance(node.value, ast.Name)
+                and node.value.id in ("jnp", "jax")):
+            out.append(_mk(
+                "RPR003", node,
+                "jnp.float64 in a device-path module — the device dtype "
+                "is f32; the f64 oracle is the host numpy path (§6)",
+                lines, path))
+        elif isinstance(node, ast.Constant) and node.value == "jax_enable_x64":
+            out.append(_mk(
+                "RPR003", node,
+                "enabling jax x64 from a device-path module flips every "
+                "traced dtype — forbidden outside test harnesses (§6)",
+                lines, path))
+    for fn in _jit_reachable(tree):
+        for node in _own_nodes(fn):
+            hit = (isinstance(node, ast.Attribute)
+                   and node.attr == "float64") or \
+                  (isinstance(node, ast.Constant)
+                   and node.value == "float64")
+            if hit:
+                out.append(_mk(
+                    "RPR003", node,
+                    f"float64 inside jit-reachable function "
+                    f"`{fn.name}` — a silent f64 leak into the compiled "
+                    f"program flips knife-edge slots (§6)", lines, path))
+    return out
+
+
+# --------------------------------------------------------------------------
+# RPR004 — unguarded epsilon comparisons in the knife-edge modules
+# --------------------------------------------------------------------------
+
+def _check_epsilon_guards(tree, lines, path):
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        if not any(isinstance(op, (ast.Lt, ast.LtE, ast.Gt, ast.GtE))
+                   for op in node.ops):
+            continue
+        eps_literals = []
+        guarded = False
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Constant) and isinstance(sub.value, float) \
+                    and 0.0 < abs(sub.value) < 1e-3:
+                eps_literals.append(sub.value)
+            name = _terminal(sub) if isinstance(
+                sub, (ast.Name, ast.Attribute)) else None
+            if name and (name in KNOWN_GUARDS or _NAMED_GUARD_RE.match(name)):
+                guarded = True
+        if eps_literals and not guarded:
+            lits = ", ".join(repr(v) for v in sorted(set(eps_literals)))
+            out.append(_mk(
+                "RPR004", node,
+                f"float comparison against inline epsilon {lits} — "
+                f"knife-edge tolerances must reference a named guard "
+                f"(FLEX_REL / _DEVICE_CEIL_EPS / ... , §5/§6)",
+                lines, path))
+    return out
+
+
+# --------------------------------------------------------------------------
+# RPR005 — host sync inside jit-reachable functions
+# --------------------------------------------------------------------------
+
+_NP_NAMES = frozenset({"np", "numpy", "onp"})
+_SYNC_METHODS = frozenset({"item", "tolist", "block_until_ready"})
+
+
+def _check_host_sync(tree, lines, path):
+    out = []
+    for fn in _jit_reachable(tree):
+        for node in _own_nodes(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr in _SYNC_METHODS:
+                out.append(_mk(
+                    "RPR005", node,
+                    f".{f.attr}() inside jit-reachable function "
+                    f"`{fn.name}` forces a host sync under trace",
+                    lines, path))
+            elif (isinstance(f, ast.Attribute)
+                  and isinstance(f.value, ast.Name)
+                  and f.value.id in _NP_NAMES
+                  and f.attr in ("asarray", "array")):
+                out.append(_mk(
+                    "RPR005", node,
+                    f"{f.value.id}.{f.attr}() on a traced value inside "
+                    f"jit-reachable function `{fn.name}` forces a host "
+                    f"round trip — use jnp", lines, path))
+            elif (isinstance(f, ast.Attribute) and f.attr == "device_get"):
+                out.append(_mk(
+                    "RPR005", node,
+                    f"device_get inside jit-reachable function "
+                    f"`{fn.name}`", lines, path))
+            elif (isinstance(f, ast.Name) and f.id in ("float", "int")
+                  and node.args
+                  and not all(isinstance(a, ast.Constant)
+                              for a in node.args)):
+                out.append(_mk(
+                    "RPR005", node,
+                    f"{f.id}(...) on a non-constant inside jit-reachable "
+                    f"function `{fn.name}` concretizes a traced value",
+                    lines, path))
+    return out
+
+
+# --------------------------------------------------------------------------
+# RPR006 — donation whitelist
+# --------------------------------------------------------------------------
+
+def _check_donation(tree, lines, path):
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg in ("donate_argnums", "donate_argnames"):
+                    out.append(_mk(
+                        "RPR006", kw.value,
+                        "buffer donation outside the §11 whitelist "
+                        "(learn/replay.py) — donated inputs invalidate "
+                        "cross-call cached buffers", lines, path))
+    return out
+
+
+# --------------------------------------------------------------------------
+# RPR007 — callback primitives in device-path modules
+# --------------------------------------------------------------------------
+
+def _check_callbacks(tree, lines, path):
+    out = []
+    for node in ast.walk(tree):
+        name = _terminal(node) if isinstance(
+            node, (ast.Name, ast.Attribute)) else None
+        if name in _CALLBACKS:
+            out.append(_mk(
+                "RPR007", node,
+                f"{name} in a device-path module — hot-path programs "
+                f"must stay callback-free (§9)", lines, path))
+        elif (isinstance(node, ast.Attribute) and node.attr == "print"
+              and isinstance(node.value, ast.Attribute)
+              and node.value.attr == "debug"):
+            out.append(_mk(
+                "RPR007", node,
+                "jax.debug.print in a device-path module — hot-path "
+                "programs must stay callback-free (§9)", lines, path))
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.module.startswith("jax") \
+                and any(a.name in _CALLBACKS for a in node.names):
+            out.append(_mk(
+                "RPR007", node,
+                "importing a callback primitive into a device-path "
+                "module (§9)", lines, path))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+RULES = (
+    Rule("RPR001", "timing-outside-trace",
+         "wall-clock timing only in obs/trace.py; spans are the timing "
+         "source (§10)",
+         lambda rel: _in_library(rel) and rel != TIMING_SOURCE,
+         _check_timing),
+    Rule("RPR002", "unbounded-cache",
+         "every functools cache carries an explicit maxsize bound (§11)",
+         _in_library,
+         _check_unbounded_cache),
+    Rule("RPR003", "float64-on-device-path",
+         "no f64 enters a traced device program outside the documented "
+         "oracle boundaries (§6)",
+         _in_device_path,
+         _check_float64),
+    Rule("RPR004", "unguarded-epsilon",
+         "knife-edge float comparisons reference named epsilon guards "
+         "(§5/§6)",
+         lambda rel: rel in GUARDED_FILES,
+         _check_epsilon_guards),
+    Rule("RPR005", "host-sync-in-jit",
+         "no host sync inside functions reachable from a jit factory",
+         _in_library,
+         _check_host_sync),
+    Rule("RPR006", "donation-whitelist",
+         "donate_argnums only in §11-whitelisted modules",
+         lambda rel: _in_library(rel) and rel not in DONATION_WHITELIST,
+         _check_donation),
+    Rule("RPR007", "callback-free-hot-path",
+         "no callback primitives in device-path modules (§9)",
+         _in_device_path,
+         _check_callbacks),
+)
+
+RULES_BY_CODE = {r.code: r for r in RULES}

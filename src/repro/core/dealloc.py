@@ -33,6 +33,16 @@ __all__ = [
     "allocation_windows",
 ]
 
+# Named epsilon guards (DESIGN.md §5/§6, enforced by analysis rule RPR004).
+# _FEAS_EPS: f64 noise floor on the slack omega = window - sum(e) — windows
+# are sums of the same task arrays, so a truly infeasible job sits well
+# below -1e-9 while round-off sits within it.
+_FEAS_EPS = 1e-9
+# _CAP_EPS: the x == 1 / fully-capped knife edge of Prop 4.5. sizes == e
+# holds exactly in f64 when x == 1 (cap = e/x - e = 0), so 1e-12 only
+# absorbs the one-ulp blur of the waterfill's subtract-compare.
+_CAP_EPS = 1e-12
+
 
 def window_sizes(job: ChainJob, x: float) -> np.ndarray:
     """Return optimal window sizes hat_s_i for every task (Algorithm 1).
@@ -47,7 +57,7 @@ def window_sizes(job: ChainJob, x: float) -> np.ndarray:
     delta = job.delta_array()
     l = job.l
     omega = job.window - float(e.sum())
-    if omega < -1e-9:
+    if omega < -_FEAS_EPS:
         raise ValueError(
             f"infeasible job: window {job.window} < critical path {e.sum()}"
         )
@@ -97,7 +107,7 @@ def window_sizes_batch(
     if np.any((xs <= 0.0) | (xs > 1.0)):
         bad = xs[(xs <= 0.0) | (xs > 1.0)][0]
         raise ValueError(f"Dealloc parameter must be in (0, 1], got {bad}")
-    if np.any(omega < -1e-9):
+    if np.any(omega < -_FEAS_EPS):
         raise ValueError("infeasible job: window < critical path")
     omega = np.maximum(np.asarray(omega, dtype=np.float64), 0.0)
 
@@ -160,8 +170,8 @@ def _jax_impls():
         # irrelevant) when the predicate selects the saturated branch.
         frac = x / jnp.maximum(1.0 - x, 1e-30)
         capped = jnp.minimum(z, frac * delta * jnp.maximum(sizes - e, 0.0))
-        return jnp.where(x >= 1.0 - 1e-12,
-                         jnp.where(sizes >= e - 1e-12, z, 0.0), capped)
+        return jnp.where(x >= 1.0 - _CAP_EPS,
+                         jnp.where(sizes >= e - _CAP_EPS, z, 0.0), capped)
 
     return {"window_sizes_batch": batch,
             "window_sizes_batch_jit": jax.jit(batch),
@@ -211,7 +221,7 @@ def expected_spot_work(
     sizes = np.asarray(sizes, dtype=np.float64)
     e = z / delta
     if x >= 1.0:
-        return np.where(sizes >= e - 1e-12, z, 0.0)
+        return np.where(sizes >= e - _CAP_EPS, z, 0.0)
     slack = np.maximum(sizes - e, 0.0)
     return np.minimum(z, x / (1.0 - x) * delta * slack)
 

@@ -49,7 +49,7 @@ PRICE_HI = 1.0
 P_ONDEMAND = 1.0
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=1024)  # bounded: (mean, lo, hi) triples
 def truncated_exp_rate(mean: float, lo: float, hi: float) -> float:
     """Rate lambda of an exponential truncated to [lo, hi] with given mean.
 

@@ -299,8 +299,19 @@ def _selfowned_counts_vec(
 # the min(..., delta) clamp already pins the common exact-integer cases.
 _DEVICE_CEIL_EPS = 1e-5
 
+# _BETA_ONE_EPS: the beta_0 == 1 knife edge of Eq. (11) — beta_0 arrives as
+# an exact 1.0 from the grid builder, so 1e-12 only absorbs f64 parsing /
+# arithmetic blur, never a real beta_0 < 1.
+_BETA_ONE_EPS = 1e-12
+# _SPAN_EPS: zero-length allocation windows (ends == starts to f64
+# round-off) carry no work and must not claim pool slots.
+_SPAN_EPS = 1e-12
+# _HOST_DUST: host twin of plan.py's _DEVICE_DUST — kill z - r*size residue
+# (~1e-13 on fully-self-owned tasks) before it reaches the cost kernels.
+_HOST_DUST = 1e-9
 
-@functools.lru_cache(maxsize=None)
+
+@functools.lru_cache(maxsize=2)   # bounded: one entry per self-owned mode
 def _selfowned_counts_impl(mode: str):
     """Traceable jnp twin of :func:`_selfowned_counts_vec` (policy (12)).
 
@@ -316,7 +327,7 @@ def _selfowned_counts_impl(mode: str):
         def counts(z, delta, sizes, beta0, avail):
             s = jnp.maximum(sizes, 1e-12)
             safe_b0 = jnp.where(jnp.isnan(beta0), 1.0, beta0)
-            one = safe_b0 >= 1.0 - 1e-12
+            one = safe_b0 >= 1.0 - _BETA_ONE_EPS
             den = s * jnp.where(one, 1.0, 1.0 - safe_b0)
             # Eq.-(11) numerator z - delta*size*beta_0 is EXACTLY zero for
             # every task the Dealloc waterfill fills to its cap (there
@@ -340,7 +351,7 @@ def _selfowned_counts_impl(mode: str):
     raise ValueError(f"unknown self-owned mode {mode!r}")
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=2)   # bounded: one entry per self-owned mode
 def _selfowned_counts_jit(mode: str):
     import jax
 
@@ -416,7 +427,7 @@ def _allocate_pool(
     used = pool.used
     total = pool.total
     spans = ends - starts
-    live = (cap > 0.0) & (spans > 1e-12)
+    live = (cap > 0.0) & (spans > _SPAN_EPS)
     order = np.argsort(starts, kind="stable")
     # Python-native scalars for the contended scan (numpy scalar boxing is
     # the dominant per-task cost there).
@@ -502,7 +513,7 @@ def _simulate_plan(
     sizes = plan.sizes
     z_t = np.maximum(plan.z - r_alloc * sizes, 0.0)
     # Kill float dust (z - r*size ~ 1e-13 on fully-self-owned tasks).
-    z_t[z_t <= 1e-9 * (plan.z + 1.0)] = 0.0
+    z_t[z_t <= _HOST_DUST * (plan.z + 1.0)] = 0.0
     d_eff = np.maximum(plan.delta - r_alloc, 0.0)
     selfowned_work = np.minimum(r_alloc * sizes, plan.z)
 

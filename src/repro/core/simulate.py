@@ -52,6 +52,10 @@ __all__ = ["TaskSim", "simulate_tasks", "FLEX_REL", "FLEX_ABS"]
 # (DESIGN.md §5).
 FLEX_REL = 1e-4
 FLEX_ABS = 1e-5
+# _WORK_EPS: "is there any cloud work left" predicate on z_t. Residual
+# workloads are differences of f64 sums, so true zeros land within one ulp;
+# 1e-15 is far below any real task's workload (O(1) units).
+_WORK_EPS = 1e-15
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,7 +99,7 @@ def simulate_tasks(
     d_eff = np.asarray(d_eff, dtype=np.float64)
 
     n = start.shape[0]
-    active = z_t > 1e-15
+    active = z_t > _WORK_EPS
     if np.any(active & (d_eff <= 0.0)):
         raise ValueError("task with remaining cloud work but no cloud instances")
     # Avoid 0/0 on inactive tasks.
@@ -174,7 +178,7 @@ def simulate_chains_early(
     turn_count = np.zeros(J)
     for k in range(L):
         end_k = ends[:, k]
-        live = end_k > cur - 1e-15
+        live = end_k > cur - _WORK_EPS
         start_k = np.minimum(cur, end_k)
         sim = simulate_tasks(
             view, start_k, end_k, np.where(live, z_t[:, k], 0.0),
@@ -188,7 +192,7 @@ def simulate_chains_early(
         if selfowned_pins is not None:
             finish_k = np.where(selfowned_pins[:, k], end_k, finish_k)
         # Padding tasks (z_t == 0, no pin) leave `cur` untouched.
-        moved = (z_t[:, k] > 1e-15) | (
+        moved = (z_t[:, k] > _WORK_EPS) | (
             selfowned_pins[:, k] if selfowned_pins is not None else False)
         cur = np.where(moved, finish_k, cur)
     return TaskSim(

@@ -134,7 +134,7 @@ def _exp_prices(u, mean, lo, hi, xp=np):
     return xp.minimum(lo + mean * (-xp.log1p(-u)), hi)
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=4096)  # bounded: distinct bid levels
 def _avail_threshold(mean: float, lo: float, hi: float, bid: float) -> int:
     """Largest 24-bit level whose f64 price clears ``bid``.
 

@@ -95,6 +95,44 @@ def _hedge_kernel(C_ref, eta_ref, u_ref, nd_ref,
     jax.lax.fori_loop(0, (J + BJ - 1) // BJ, stepB, 0)
 
 
+def _hedge_call(C_p, eta_p, u_p, nd_p, *, K: int, J: int, n_rows: int,
+                Pp: int, m: int, BJ: int, interpret: bool):
+    """The traceable pallas launch on the padded (S, Jp, Pp) layout.
+
+    Split from :func:`hedge_replay` (which owns the host-side numpy
+    padding) so ``repro.analysis.programs`` can abstract-trace the device
+    program on ShapeDtypeStructs without executing it.
+    """
+    S, Jp = C_p.shape[0], C_p.shape[1]
+    kernel = functools.partial(_hedge_kernel, J=J, n_rows=n_rows, Pp=Pp,
+                               m=m, BJ=BJ)
+    B = S * K
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, Jp, Pp), lambda b: (b // K, 0, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (b % K, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (b // K, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
+            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
+            pl.BlockSpec((1, Pp), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Jp), jnp.int32),
+            jax.ShapeDtypeStruct((B, Jp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Jp), jnp.float32),
+            jax.ShapeDtypeStruct((B, Pp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n_rows, Pp), jnp.float32)],
+        interpret=interpret,
+    )(C_p, eta_p, u_p, nd_p)
+
+
 def hedge_replay(C, etas, u, n_done, *, block_jobs: int = 128,
                  interpret: bool | None = None):
     """Fused Hedge replay over a (S, J, P) cost tensor.
@@ -127,33 +165,9 @@ def hedge_replay(C, etas, u, n_done, *, block_jobs: int = 128,
     nd_p = np.zeros((1, Jp), dtype=np.int32)
     nd_p[0, :J] = np.asarray(n_done, dtype=np.int32)
 
-    kernel = functools.partial(_hedge_kernel, J=J, n_rows=n_rows, Pp=Pp,
-                               m=P, BJ=BJ)
-    B = S * K
-    ch, ps, ec, wf = pl.pallas_call(
-        kernel,
-        grid=(B,),
-        in_specs=[
-            pl.BlockSpec((1, Jp, Pp), lambda b: (b // K, 0, 0)),
-            pl.BlockSpec((1, Jp), lambda b: (b % K, 0)),
-            pl.BlockSpec((1, Jp), lambda b: (b // K, 0)),
-            pl.BlockSpec((1, Jp), lambda b: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
-            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
-            pl.BlockSpec((1, Jp), lambda b: (b, 0)),
-            pl.BlockSpec((1, Pp), lambda b: (b, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, Jp), jnp.int32),
-            jax.ShapeDtypeStruct((B, Jp), jnp.float32),
-            jax.ShapeDtypeStruct((B, Jp), jnp.float32),
-            jax.ShapeDtypeStruct((B, Pp), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.VMEM((n_rows, Pp), jnp.float32)],
-        interpret=interpret,
-    )(C_p, eta_p, u_p, nd_p)
+    ch, ps, ec, wf = _hedge_call(C_p, eta_p, u_p, nd_p, K=K, J=J,
+                                 n_rows=n_rows, Pp=Pp, m=P, BJ=BJ,
+                                 interpret=interpret)
 
     logw = np.asarray(wf, dtype=np.float64).reshape(S, K, Pp)[..., :P]
     w = np.exp(logw - logw.max(axis=-1, keepdims=True))

@@ -20,7 +20,6 @@ os.environ["XLA_FLAGS"] = (
 import argparse      # noqa: E402
 import json          # noqa: E402
 import re            # noqa: E402
-import time          # noqa: E402
 import traceback     # noqa: E402
 
 import jax           # noqa: E402
@@ -34,6 +33,7 @@ from repro.launch.mesh import HW, make_production_mesh  # noqa: E402
 from repro.launch import steps as step_lib  # noqa: E402
 from repro.launch.variants import VARIANTS  # noqa: E402
 from repro.models import build  # noqa: E402
+from repro.obs import span  # noqa: E402
 from repro.optim import AdamW  # noqa: E402
 
 CACHE_PATH = os.path.join(os.path.dirname(__file__),
@@ -96,54 +96,60 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
         return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
                 "variant": variant, "status": "skipped", "reason": why}
 
-    t0 = time.time()
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    overrides, cfg = VARIANTS[variant](cfg, shape)
-    overrides = dict(overrides)
-    n_microbatches = int(overrides.pop("_microbatches", n_microbatches))
-    rules = ShardingRules.create(mesh, overrides)
-    model = build(cfg)
+    with span("dryrun.lower", arch=arch, shape=shape_name) as lower_sp:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        overrides, cfg = VARIANTS[variant](cfg, shape)
+        overrides = dict(overrides)
+        n_microbatches = int(overrides.pop("_microbatches", n_microbatches))
+        rules = ShardingRules.create(mesh, overrides)
+        model = build(cfg)
 
-    params_s = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
-    batch_s = input_specs(cfg, shape)
+        params_s = jax.eval_shape(lambda k: model.init(k),
+                                  jax.random.PRNGKey(0))
+        batch_s = input_specs(cfg, shape)
 
+        with jax.set_mesh(mesh):
+            if shape.mode == "train":
+                opt = AdamW(lr=3e-4)
+                opt_s = jax.eval_shape(opt.init, params_s)
+                fn = step_lib.make_train_step(model, opt, rules,
+                                              n_microbatches=n_microbatches)
+                in_sh, out_sh = step_lib.train_shardings(
+                    model, rules, mesh, params_s, opt_s, batch_s)
+                lowered = jax.jit(fn, in_shardings=in_sh,
+                                  out_shardings=out_sh).lower(
+                    params_s, opt_s, batch_s)
+            elif shape.mode == "prefill":
+                fn = step_lib.make_prefill_step(model, rules)
+                cache_s = jax.eval_shape(fn, params_s, batch_s)[1]
+                in_sh, out_sh = step_lib.prefill_shardings(
+                    model, rules, mesh, params_s, batch_s, cache_s)
+                lowered = jax.jit(fn, in_shardings=in_sh,
+                                  out_shardings=out_sh).lower(params_s,
+                                                              batch_s)
+            else:  # decode
+                if cfg.kind == "encdec":
+                    cache_s = jax.eval_shape(
+                        lambda: model.init_cache(shape.global_batch,
+                                                 shape.seq_len,
+                                                 enc_len=4096))
+                else:
+                    cache_s = jax.eval_shape(
+                        lambda: model.init_cache(shape.global_batch,
+                                                 shape.seq_len))
+                fn = step_lib.make_decode_step(model, rules)
+                tok_s = batch_s["token"]
+                pos_s = jax.ShapeDtypeStruct((), jnp.int32)
+                in_sh, out_sh = step_lib.decode_shardings(
+                    model, rules, mesh, params_s, cache_s, tok_s)
+                lowered = jax.jit(fn, in_shardings=in_sh,
+                                  out_shardings=out_sh).lower(
+                    params_s, cache_s, tok_s, pos_s)
+    t_lower = lower_sp.seconds
     with jax.set_mesh(mesh):
-        if shape.mode == "train":
-            opt = AdamW(lr=3e-4)
-            opt_s = jax.eval_shape(opt.init, params_s)
-            fn = step_lib.make_train_step(model, opt, rules,
-                                          n_microbatches=n_microbatches)
-            in_sh, out_sh = step_lib.train_shardings(
-                model, rules, mesh, params_s, opt_s, batch_s)
-            lowered = jax.jit(fn, in_shardings=in_sh,
-                              out_shardings=out_sh).lower(
-                params_s, opt_s, batch_s)
-        elif shape.mode == "prefill":
-            fn = step_lib.make_prefill_step(model, rules)
-            cache_s = jax.eval_shape(fn, params_s, batch_s)[1]
-            in_sh, out_sh = step_lib.prefill_shardings(
-                model, rules, mesh, params_s, batch_s, cache_s)
-            lowered = jax.jit(fn, in_shardings=in_sh,
-                              out_shardings=out_sh).lower(params_s, batch_s)
-        else:  # decode
-            if cfg.kind == "encdec":
-                cache_s = jax.eval_shape(
-                    lambda: model.init_cache(shape.global_batch, shape.seq_len,
-                                             enc_len=4096))
-            else:
-                cache_s = jax.eval_shape(
-                    lambda: model.init_cache(shape.global_batch, shape.seq_len))
-            fn = step_lib.make_decode_step(model, rules)
-            tok_s = batch_s["token"]
-            pos_s = jax.ShapeDtypeStruct((), jnp.int32)
-            in_sh, out_sh = step_lib.decode_shardings(
-                model, rules, mesh, params_s, cache_s, tok_s)
-            lowered = jax.jit(fn, in_shardings=in_sh,
-                              out_shardings=out_sh).lower(
-                params_s, cache_s, tok_s, pos_s)
-        t_lower = time.time() - t0
-        compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        with span("dryrun.compile", arch=arch, shape=shape_name) as comp_sp:
+            compiled = lowered.compile()
+    t_compile = comp_sp.seconds
 
     cost = compiled.cost_analysis() or {}
     mem = compiled.memory_analysis()

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import argparse
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +21,7 @@ import numpy as np
 from repro.configs import get_config, smoke_config
 from repro.distributed.sharding import ShardingRules
 from repro.launch import steps as step_lib
+from repro.obs import span
 from repro.models import build
 
 __all__ = ["serve_requests", "main"]
@@ -43,32 +43,33 @@ def serve_requests(cfg, prompts: np.ndarray, batch: int, max_new: int,
 
     out = np.zeros((n, max_new), np.int32)
     queue = list(range(n))
-    t0 = time.time()
     done_total = 0
-    while queue:
-        ids = queue[:batch]
-        queue = queue[len(ids):]
-        pad = batch - len(ids)
-        toks = np.concatenate(
-            [prompts[ids], np.zeros((pad, S), np.int32)], axis=0)
-        pbatch = {"tokens": jnp.asarray(toks)}
-        if cfg.kind == "encdec":  # stub audio frontend
-            pbatch["frames"] = jnp.zeros((batch, max(S // 4, 1), cfg.d_model),
-                                         jnp.float32)
-        if cfg.kind == "vlm":     # stub vision frontend
-            pbatch["vision"] = jnp.zeros((batch, cfg.frontend_len,
-                                          cfg.d_model), jnp.float32)
-        logits, cache = prefill_fn(params, pbatch)
-        token = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
-        pos0 = S + (cfg.n_meta_tokens or 0)
-        for t in range(max_new):
-            for i, rid in enumerate(ids):
-                out[rid, t] = int(token[i, 0])
-            if t + 1 < max_new:
-                token, cache = decode_fn(params, cache, token,
-                                         jnp.int32(pos0 + t))
-        done_total += len(ids)
-    dt = time.time() - t0
+    with span("serve.requests", n=n, batch=batch, max_new=max_new) as sp:
+        while queue:
+            ids = queue[:batch]
+            queue = queue[len(ids):]
+            pad = batch - len(ids)
+            toks = np.concatenate(
+                [prompts[ids], np.zeros((pad, S), np.int32)], axis=0)
+            pbatch = {"tokens": jnp.asarray(toks)}
+            if cfg.kind == "encdec":  # stub audio frontend
+                pbatch["frames"] = jnp.zeros(
+                    (batch, max(S // 4, 1), cfg.d_model), jnp.float32)
+            if cfg.kind == "vlm":     # stub vision frontend
+                pbatch["vision"] = jnp.zeros((batch, cfg.frontend_len,
+                                              cfg.d_model), jnp.float32)
+            logits, cache = prefill_fn(params, pbatch)
+            token = jnp.argmax(logits[:, -1, :],
+                               axis=-1)[:, None].astype(jnp.int32)
+            pos0 = S + (cfg.n_meta_tokens or 0)
+            for t in range(max_new):
+                for i, rid in enumerate(ids):
+                    out[rid, t] = int(token[i, 0])
+                if t + 1 < max_new:
+                    token, cache = decode_fn(params, cache, token,
+                                             jnp.int32(pos0 + t))
+            done_total += len(ids)
+    dt = sp.seconds
     tps = done_total * max_new / max(dt, 1e-9)
     return out, {"requests": done_total, "tokens_per_s": tps,
                  "wall_s": dt}

@@ -174,6 +174,28 @@ _FACTORIES = (
 )
 
 
+def jit_factories():
+    """The registered compiled-fn factory registry: (name, module, attr).
+
+    The programmatic face of ``_FACTORIES`` — ``repro.analysis.programs``
+    builds its canonical program inventory from the same factories this
+    module snapshots cache stats for.
+    """
+    return _FACTORIES
+
+
+def placement_violations(mesh=None, keys=None):
+    """Failed §9-placement (and related) checks over the canonical programs.
+
+    Delegates to the Layer-2 verifier in :mod:`repro.analysis.programs` —
+    the single implementation of the placement contract — and returns only
+    the failed :class:`CheckResult`s (empty list = contract holds).
+    """
+    from repro.analysis.programs import verify_all
+
+    return [c for c in verify_all(mesh=mesh, keys=keys) if not c.ok]
+
+
 def factory_caches():
     """{name: {hits, misses, maxsize, currsize, evictions}} per cache.
 

@@ -279,79 +279,55 @@ def test_sweep_policies_accepts_mesh():
 
 # --------------------------------------------------------------------------
 # Collective counts in the compiled programs: the §9 placement contract,
-# read through the standing obs.compiled metrics (not ad-hoc HLO greps).
+# verified through the single implementation in repro.analysis.programs
+# (the same Layer-2 pass CI runs) — not ad-hoc HLO greps.
 # --------------------------------------------------------------------------
 
-def _counts(fn, *args):
-    """Per-kind collective op counts of the compiled program."""
-    from repro.obs.compiled import hlo_metrics
+def _verify(keys):
+    from repro.analysis.programs import verify_all
 
-    return hlo_metrics(fn, *args)["collective_counts"]
+    checks = verify_all(mesh=ScenarioMesh.create(), keys=keys)
+    assert checks, f"no checks produced for {keys}"
+    failed = [c for c in checks if not c.ok]
+    assert not failed, "\n".join(f"{c.program}/{c.check}: {c.detail}"
+                                 for c in failed)
+    return checks
 
 
 def test_cost_program_has_zero_collectives():
     # The scenario axis never reduces inside the cost tensor, so the
     # compiled sharded chain/task programs must contain NO collectives —
     # sharding the hot loop costs zero cross-device traffic.
-    from repro.engine import backend_jax as bj
-
-    mesh = ScenarioMesh.create()
-    n = mesh.n_shards
-    fns = bj._sharded_fns(mesh)
-    A = jnp.zeros((n, 11), jnp.float32)
-    C = jnp.zeros((n, 11), jnp.float32)
-    chain_args = (A, C, jnp.zeros(4, jnp.float32),
-                  jnp.zeros((4, 3), jnp.float32),
-                  jnp.zeros((4, 3), jnp.float32),
-                  jnp.zeros((4, 3), jnp.float32),
-                  jnp.zeros((4, 3), jnp.bool_),
-                  jnp.float32(1.0), jnp.float32(1.0))
-    assert _counts(fns["chain"], *chain_args)["total"] == 0
-    task_args = (A, C, jnp.zeros(12, jnp.float32),
-                 jnp.zeros(12, jnp.float32), jnp.zeros(12, jnp.float32),
-                 jnp.zeros(12, jnp.float32), jnp.float32(1.0),
-                 jnp.float32(1.0))
-    assert _counts(fns["task"], *task_args)["total"] == 0
+    checks = _verify(["engine.eval.chain:sharded", "engine.eval.task:sharded"])
+    colls = [c for c in checks if c.check == "collectives"]
+    assert len(colls) == 2
+    for c in colls:
+        assert "'total': 0" in c.detail
 
 
 def test_synth_program_has_zero_collectives():
-    from repro.engine.scenarios import _device_synth_fn
-
-    jobs, horizon = _setup()
-    mesh = ScenarioMesh.create()
-    n = mesh.n_shards
-    spec = ScenarioSpec("fresh", horizon, n, seed=1)
-    fn = _device_synth_fn(spec, mesh)
-    idx = jnp.arange(n, dtype=jnp.int32)
-    z = jnp.zeros((n, spec.n_slots), jnp.float32)
-    assert _counts(fn, idx, z, z, z)["total"] == 0
+    checks = _verify(["scenarios.synth:fresh:sharded"])
+    (coll,) = [c for c in checks if c.check == "collectives"]
+    assert "'total': 0" in coll.detail
 
 
 def test_fold_program_has_exactly_one_allreduce():
     # replay_stream's sharded fold: every per-learner sum rides ONE packed
     # psum — exactly one all-reduce per chunk, and no other collective.
-    from repro.learn.replay import (_event_ring, _sharded_fold, build_events,
-                                    fold_acc_size)
+    checks = _verify(["learn.fold:sharded"])
+    (coll,) = [c for c in checks if c.check == "collectives"]
+    assert "'all-reduce': 1" in coll.detail
+    assert "'total': 1" in coll.detail
 
-    jobs, _ = _setup()
-    mesh = ScenarioMesh.create()
-    n = mesh.n_shards
-    arrivals = np.array([j.arrival for j in jobs])
-    d = max(j.deadline - j.arrival for j in jobs)
-    ev_kind, ev_j, _ = build_events(arrivals, d)
-    fold_fn = _sharded_fold(mesh, (("hedge", 1),), _event_ring(ev_kind), 0)
-    J, P = len(jobs), len(GRID)
-    args = (jnp.zeros(fold_acc_size(1, J, P), jnp.float32),
-            jnp.zeros((2 * n, J, P), jnp.float32),
-            jnp.zeros((2 * n, J), jnp.float32),
-            jnp.ones(2 * n, bool), jnp.zeros((1, J), jnp.float32),
-            jnp.zeros((1, J), jnp.float32), jnp.asarray(ev_kind),
-            jnp.asarray(ev_j),
-            jnp.asarray(np.nonzero(ev_kind == 0)[0].astype(np.int32)),
-            jnp.ones(J, jnp.float32))
-    counts = _counts(fold_fn, *args)
-    assert counts["all-reduce"] == 1
-    assert counts["total"] == 1
+
+def test_placement_violations_empty_on_contract():
+    # obs.compiled.placement_violations is the standing-metric face of the
+    # same verifier: the §9 contract holding means an empty violation list.
+    from repro.obs.compiled import placement_violations
+
+    assert placement_violations(
+        mesh=ScenarioMesh.create(),
+        keys=["engine.eval.chain:sharded", "learn.fold:sharded"]) == []
 
 
 # --------------------------------------------------------------------------
