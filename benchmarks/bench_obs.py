@@ -9,7 +9,11 @@ stream plus a ``replay_stream`` regret fold — and prints:
 * the compiled-program table (gflops / MB / collective op counts per
   cached jit program, via ``repro.obs.compiled``) — the standing form of
   the §9 placement contract (zero collectives in the eval/synth hot loop,
-  one packed psum per streamed fold chunk);
+  one packed psum per streamed fold chunk). On the jax backend the
+  observed run includes a ``run_tola_scenarios`` pool-refinement pass on
+  a 2-D ``GridMesh``, so the sharded refinement programs
+  (``engine.eval.chain_ps:sharded`` / ``engine.eval.task_ps:sharded``)
+  appear in the table with their collective counts (zero, per §9);
 * the metrics snapshot (chunk latency histogram, scenarios/sec,
   learner weight entropy) plus the cross-call plan/view cache counters
   (``engine.plan_cache{event=hit|miss|evict}`` and friends, DESIGN.md
@@ -70,13 +74,37 @@ def run(n_jobs: int, n_policies: int, n_scenarios: int, chunk: int,
                              scenario_chunk=chunk, backend=backend,
                              engine_backend=backend)
 
+    # Pool-refinement on a 2-D GridMesh (jax only): puts the sharded
+    # per-scenario-availability programs (engine.eval.chain_ps:sharded,
+    # engine.eval.task_ps:sharded) into the compiled-program table. A
+    # 1-device box degenerates to the 1x1 mesh — same programs, same keys.
+    refine_pass = None
+    if backend == "jax":
+        import jax
+
+        from repro.core import run_tola_scenarios
+        from repro.engine import GridMesh, make_scenarios
+
+        avail = len(jax.devices())
+        mesh = GridMesh.create(model_devices=2 if avail >= 2 else 1)
+        markets = make_scenarios(horizon, 2, seed=seed + 2000)
+
+        def refine_pass():
+            return run_tola_scenarios(jobs, grid[:8], markets, r_total,
+                                      seed=seed, pool_iters=1,
+                                      backend="jax", mesh=mesh)
+
     grid_pass()          # absorb jit compilation before any timing
     stream_pass()
+    if refine_pass is not None:
+        refine_pass()
 
     # --- the observed run: spans + metrics + compiled capture ------------
     with obs.observe(programs=True) as session:
         res = grid_pass()
         slr = stream_pass()
+        if refine_pass is not None:
+            refine_pass()
     tracer, reg = session.tracer, session.compiled
     totals = tracer.totals()
     out = {

@@ -21,21 +21,30 @@ tests used to grep compiled HLO for:
   the next program with a different aval than a strong one and
   fragments downstream jit caches.
 
-Program inventory (canonical shapes mirror the real call sites):
+Program inventory (canonical shapes mirror the real call sites; on a 2-D
+``GridMesh`` scenario rows scale with ``data_shards`` and group rows with
+``model_shards``, so every axis divides its mesh axis exactly):
 
-=========================  ===============================================
-engine.eval.chain:sharded  ``backend_jax._sharded_fns(mesh)["chain"]``
-engine.eval.task:sharded   ``backend_jax._sharded_fns(mesh)["task"]``
-scenarios.synth:fresh:shd  ``scenarios._device_synth_fn(spec, mesh)``
-scenarios.views:sharded    ``scenarios._device_views_fn(slot, mesh)``
-plan.device.full           ``plan._device_plan_fns("prop12", "dealloc")``
-learn.scan:hedge           ``replay._compiled_scan("hedge", ring)``
-learn.fold:sharded         ``replay._sharded_fold(mesh, ...)`` (donated)
-kernels.policy_cost.chain  ``policy_cost_chain`` (interpret pallas)
-kernels.hedge_replay       ``weight_update._hedge_call`` (interpret)
-kernels.flash_attention    ``ops._flash_jit`` (interpret pallas)
-kernels.ssd_scan           ``ops._ssd_jit`` (interpret pallas)
-=========================  ===============================================
+============================  ============================================
+engine.eval.chain:sharded     ``backend_jax._sharded_fns(mesh)["chain"]``
+engine.eval.task:sharded      ``backend_jax._sharded_fns(mesh)["task"]``
+engine.eval.chain_ps:sharded  ``_sharded_fns(mesh)["chain_ps"]`` (refined)
+engine.eval.task_ps:sharded   ``_sharded_fns(mesh)["task_ps"]`` (refined)
+scenarios.synth:fresh:shd     ``scenarios._device_synth_fn(spec, mesh)``
+scenarios.views:sharded       ``scenarios._device_views_fn(slot, mesh)``
+plan.device.full              ``plan._device_plan_fns("prop12", "dealloc")``
+learn.scan:hedge              ``replay._compiled_scan("hedge", ring)``
+learn.fold:sharded            ``replay._sharded_fold(mesh, ...)`` (donated)
+kernels.policy_cost.chain     ``policy_cost_chain`` (interpret pallas)
+kernels.hedge_replay          ``weight_update._hedge_call`` (interpret)
+kernels.flash_attention       ``ops._flash_jit`` (interpret pallas)
+kernels.ssd_scan              ``ops._ssd_jit`` (interpret pallas)
+============================  ============================================
+
+The ``_ps`` (per-scenario availability, i.e. TOLA pool-refinement) eval
+programs carry (S, R, L) self-owned stacks sharded over BOTH mesh axes
+and, like the plain eval programs, must compile to ZERO collectives —
+refinement rounds cost no cross-device traffic either.
 
 The verifier is what ``tests/test_shard.py``'s collective assertions and
 ``obs.compiled``'s standing §9 check delegate to — one implementation of
@@ -63,6 +72,8 @@ _ONE_PSUM = {"all-reduce": 1, "total": 1}
 PROGRAM_KEYS = (
     "engine.eval.chain:sharded",
     "engine.eval.task:sharded",
+    "engine.eval.chain_ps:sharded",
+    "engine.eval.task_ps:sharded",
     "scenarios.synth:fresh:sharded",
     "scenarios.views:sharded",
     "plan.device.full",
@@ -243,20 +254,36 @@ def _build_eval_programs(mesh) -> list[ProgramSpec]:
 
     from repro.engine import backend_jax as bj
 
-    n = mesh.n_shards
+    # Scenario rows ride "data", group rows ride "model": size each axis
+    # by its own shard count so the canonical shapes divide exactly.
+    d, m = mesh.data_shards, mesh.model_shards
     fns = bj._sharded_fns(mesh)
-    A = _sds((n, 11), jnp.float32)
-    chain_args = (A, A, _sds((4,), jnp.float32), _sds((4, 3), jnp.float32),
-                  _sds((4, 3), jnp.float32), _sds((4, 3), jnp.float32),
-                  _sds((4, 3), jnp.bool_), 1.0, 1.0)
-    task_args = (A, A, _sds((12,), jnp.float32), _sds((12,), jnp.float32),
-                 _sds((12,), jnp.float32), _sds((12,), jnp.float32),
+    A = _sds((d, 11), jnp.float32)
+    R, L = 4 * m, 3
+    chain_args = (A, A, _sds((R,), jnp.float32), _sds((R, L), jnp.float32),
+                  _sds((R, L), jnp.float32), _sds((R, L), jnp.float32),
+                  _sds((R, L), jnp.bool_), 1.0, 1.0)
+    F = 12 * m
+    task_args = (A, A, _sds((F,), jnp.float32), _sds((F,), jnp.float32),
+                 _sds((F,), jnp.float32), _sds((F,), jnp.float32),
                  1.0, 1.0)
+    chain_ps_args = (A, A, _sds((R,), jnp.float32),
+                     _sds((R, L), jnp.float32),
+                     _sds((d, R, L), jnp.float32),
+                     _sds((d, R, L), jnp.float32),
+                     _sds((d, R, L), jnp.bool_), 1.0, 1.0)
+    task_ps_args = (A, A, _sds((F,), jnp.float32), _sds((F,), jnp.float32),
+                    _sds((d, F), jnp.float32), _sds((d, F), jnp.float32),
+                    1.0, 1.0)
     return [
         ProgramSpec("engine.eval.chain:sharded", fns["chain"], chain_args,
                     dict(_ZERO)),
         ProgramSpec("engine.eval.task:sharded", fns["task"], task_args,
                     dict(_ZERO)),
+        ProgramSpec("engine.eval.chain_ps:sharded", fns["chain_ps"],
+                    chain_ps_args, dict(_ZERO)),
+        ProgramSpec("engine.eval.task_ps:sharded", fns["task_ps"],
+                    task_ps_args, dict(_ZERO)),
     ]
 
 
@@ -266,7 +293,8 @@ def _build_scenario_programs(mesh) -> list[ProgramSpec]:
     from repro.engine.scenarios import (ScenarioSpec, _device_synth_fn,
                                         _device_views_fn)
 
-    n = mesh.n_shards
+    # Synthesis/views shard over "data" only (replicated over "model").
+    n = mesh.data_shards
     spec = ScenarioSpec("fresh", 8.0, n, seed=1)
     synth = _device_synth_fn(spec, mesh)
     z = _sds((n, spec.n_slots), jnp.float32)
@@ -321,7 +349,9 @@ def _build_learn_programs(mesh) -> list[ProgramSpec]:
     scan_args = (_sds((2, J, P), jnp.float32), _sds((2, J), jnp.float32),
                  _sds((1, J), jnp.float32), _sds((1, J), jnp.float32),
                  _sds(ev_kind.shape, jnp.int32), _sds(ev_j.shape, jnp.int32))
-    n = mesh.n_shards
+    # The fold shards chunk rows over "data" and psums over "data" only;
+    # a 2-D mesh's "model" axis sees replicated inputs and no collective.
+    n = mesh.data_shards
     fold = _sharded_fold(mesh, (("hedge", 1),), ring, 0)
     fold_args = (_sds((fold_acc_size(1, J, P),), jnp.float32),
                  _sds((2 * n, J, P), jnp.float32),
@@ -389,10 +419,12 @@ def program_inventory(mesh=None, keys: Sequence[str] | None = None
                       ) -> tuple[list[ProgramSpec], list[CheckResult]]:
     """Build (programs, build_failures) for the canonical inventory.
 
-    ``mesh=None`` creates the default :class:`ScenarioMesh` over all
-    visible devices (1-device degenerate mesh in single-device CI; the
-    static-analysis CI job forces 8 host devices so the sharded programs
-    verify with real cross-device axes).
+    ``mesh=None`` creates the default :class:`GridMesh` over all visible
+    devices — a 1-D (data-only) mesh; pass ``GridMesh.create(n, m)`` to
+    verify the 2-D scenario x group placement. (1-device degenerate mesh
+    in single-device CI; the static-analysis and shard-smoke CI jobs force
+    8 host devices so the sharded programs verify with real cross-device
+    axes, including 4x2/2x4 grids.)
     """
     from repro.engine import ScenarioMesh
 

@@ -202,11 +202,9 @@ def _prepare_stream(jobs, policies, scenarios, r_total, windows, selfowned,
                 f"mesh= shards the scenario axis of the jax backend; "
                 f"backend {backend!r} cannot consume a ScenarioMesh "
                 f"(drop mesh= or pass backend='jax'/'auto')")
-        if isinstance(availability, (list, tuple)):
-            raise ValueError(
-                "mesh= cannot shard a batch with per-scenario availability "
-                "queries (the refined plan tensors are stacked along the "
-                "full scenario axis); evaluate those rounds unsharded")
+        # Per-scenario availability (refined plans) IS shardable: the
+        # (S, R, L) self-owned stacks shard over "data" alongside the
+        # views, group rows over "model" — see backend_jax's ps path.
     else:
         backend = resolve_backend(backend)
 
@@ -224,7 +222,7 @@ def _prepare_stream(jobs, policies, scenarios, r_total, windows, selfowned,
         jobs, policies, r_total, windows=windows, selfowned=selfowned,
         pool=pool, availability=availability,
         slots_per_unit=source.slots_per_unit,
-        n_scenarios=S, plan_backend=plan_backend)
+        n_scenarios=S, plan_backend=plan_backend, mesh=mesh)
     return source, gplan, backend, chunk, single, mesh, overlap
 
 

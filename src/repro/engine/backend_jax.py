@@ -33,13 +33,18 @@ input's shape+dtype (outputs are (S, R)-shaped cost dicts). The streamed
 regret fold in ``learn/replay.py`` is where donation pays — its
 accumulator is a genuine same-shape carry.
 
-Sharded path (DESIGN.md §9): with a ``ScenarioMesh`` the same two batch
-bodies are ``shard_map``ed over the scenario axis — stacked views arrive
-padded and sharded (``ScenarioBatch.n_rows`` rows), plan arrays are
-replicated, every shard scores only its own scenario slice, and the
-compiled program contains ZERO cross-device collectives (the scenario
-axis never reduces inside the cost tensor). Results are sliced back to
-the valid scenario count on the host side of the scatter.
+Sharded path (DESIGN.md §9): with a ``GridMesh`` the same four batch
+bodies are ``shard_map``ed over the 2-D (scenario x group) mesh — stacked
+views arrive padded and sharded over ``"data"`` (``ScenarioBatch.n_rows``
+rows), plan row batches are padded to whole groups and sharded over
+``"model"`` (edge-repeat group padding, ``pad_groups``), per-scenario
+self-owned stacks shard over BOTH axes, and scalars replicate. Every
+(data, model) shard scores only its own scenario-slab x group-block and
+the compiled program contains ZERO cross-device collectives (neither axis
+reduces inside the cost tensor). Results come back through one unpermute
+gather (the ``np.asarray`` below) and padded lanes are masked at the
+splice: ``[:S]`` drops scenario padding, indexing only the real groups
+drops group padding.
 """
 
 from __future__ import annotations
@@ -54,7 +59,13 @@ from repro.engine.plan import concat_rows, scenario_cat
 from repro.kernels.ref import chain_costs_ref, policy_cost_ref
 from repro.obs import record_jit, span
 
-__all__ = ["run"]
+__all__ = ["run", "SHARDED_PS"]
+
+# Per-scenario (refined) plans evaluate sharded since the 2-D mesh landed.
+# ``core/tola.py`` probes this flag before threading ``mesh=`` into a
+# refinement round and falls back (with a UserWarning) when it is False —
+# the escape hatch if a jax regression ever forces the ps shard path off.
+SHARDED_PS = True
 
 
 def _chain_body(A, C, arrival, ends, z_t, d_eff, pins, p_od, slot):
@@ -75,12 +86,7 @@ def _task_body(A, C, starts, ends, z_t, d_eff, p_od, slot):
     return fn(A, C)
 
 
-_chain_batch = jax.jit(_chain_body)
-_task_batch = jax.jit(_task_body)
-
-
-@jax.jit
-def _chain_batch_ps(A, C, arrival, ends, z_t, d_eff, pins, p_od, slot):
+def _chain_body_ps(A, C, arrival, ends, z_t, d_eff, pins, p_od, slot):
     """Per-scenario-plan edition: z_t/d_eff/pins are (S, R, L) stacks."""
     fn = jax.vmap(
         lambda a, c, z, d, p: chain_costs_ref(a, c, arrival, ends, z, d, p,
@@ -89,8 +95,7 @@ def _chain_batch_ps(A, C, arrival, ends, z_t, d_eff, pins, p_od, slot):
     return fn(A, C, z_t, d_eff, pins)
 
 
-@jax.jit
-def _task_batch_ps(A, C, starts, ends, z_t, d_eff, p_od, slot):
+def _task_body_ps(A, C, starts, ends, z_t, d_eff, p_od, slot):
     """Planned-start with per-scenario (S, R*L) cloud workloads."""
     fn = jax.vmap(
         lambda a, c, z, d: policy_cost_ref(a, c, starts, ends, z, d,
@@ -99,25 +104,55 @@ def _task_batch_ps(A, C, starts, ends, z_t, d_eff, p_od, slot):
     return fn(A, C, z_t, d_eff)
 
 
+_chain_batch = jax.jit(_chain_body)
+_task_batch = jax.jit(_task_body)
+_chain_batch_ps = jax.jit(_chain_body_ps)
+_task_batch_ps = jax.jit(_task_body_ps)
+
+
 @functools.lru_cache(maxsize=8)   # bounded: one entry per live mesh
 def _sharded_fns(mesh):
-    """The two batch bodies shard_map'ed over a ``ScenarioMesh``.
+    """The four batch bodies shard_map'ed over a ``GridMesh``.
 
-    Views (leading scenario axis) shard over ``"data"``; plan arrays and
-    scalars replicate. Cached per mesh so repeated calls reuse the
+    Views (leading scenario axis) shard over ``"data"``; plan row batches
+    (leading group-row axis) shard over ``"model"``; per-scenario
+    self-owned stacks shard over both; scalars replicate. On a 1-D mesh
+    ``spec("group")`` degrades to replicated and this is exactly the PR 6
+    scenario-only placement. Cached per mesh so repeated calls reuse the
     compiled program exactly like the unsharded module-scope jits.
     """
     from jax.experimental.shard_map import shard_map
 
-    dp = mesh.spec("scenario")   # P("data")
-    rp = mesh.spec()             # empty P(): replicated, any rank
-    chain = jax.jit(shard_map(
-        _chain_body, mesh=mesh.mesh,
-        in_specs=(dp, dp, rp, rp, rp, rp, rp, rp, rp), out_specs=dp))
-    task = jax.jit(shard_map(
-        _task_body, mesh=mesh.mesh,
-        in_specs=(dp, dp, rp, rp, rp, rp, rp, rp), out_specs=dp))
-    return {"chain": chain, "task": task}
+    dp = mesh.spec("scenario")            # P("data")
+    gp = mesh.spec("group")               # P("model"); P(None) on 1-D mesh
+    dgp = mesh.spec("scenario", "group")  # P("data", "model")
+    rp = mesh.spec()                      # empty P(): replicated, any rank
+    sm = functools.partial(shard_map, mesh=mesh.mesh)
+    chain = jax.jit(sm(
+        _chain_body,
+        in_specs=(dp, dp, gp, gp, gp, gp, gp, rp, rp), out_specs=dgp))
+    task = jax.jit(sm(
+        _task_body,
+        in_specs=(dp, dp, gp, gp, gp, gp, rp, rp), out_specs=dgp))
+    chain_ps = jax.jit(sm(
+        _chain_body_ps,
+        in_specs=(dp, dp, gp, gp, dgp, dgp, dgp, rp, rp), out_specs=dgp))
+    task_ps = jax.jit(sm(
+        _task_body_ps,
+        in_specs=(dp, dp, gp, gp, dgp, dgp, rp, rp), out_specs=dgp))
+    return {"chain": chain, "task": task,
+            "chain_ps": chain_ps, "task_ps": task_ps}
+
+
+def _scen_rows(a, rows: int):
+    """Edge-repeat a leading-scenario stack to the mesh-padded row count
+    (device arrays stay on device; the padded rows duplicate the last
+    scenario and are sliced off at the splice)."""
+    k = a.shape[0]
+    if rows == k:
+        return a
+    xp = np if isinstance(a, np.ndarray) else jnp
+    return xp.concatenate([a, xp.repeat(a[-1:], rows - k, axis=0)], axis=0)
 
 
 def run(gplan, batch, early_start: bool, out, mesh=None) -> None:
@@ -127,61 +162,68 @@ def run(gplan, batch, early_start: bool, out, mesh=None) -> None:
     S = batch.n_scenarios
     rows = batch.n_rows if mesh is not None else S
     ps = gplan.per_scenario
-    if mesh is not None and ps:
-        # api.py guards this combination; keep the invariant loud here too.
-        raise ValueError("sharded evaluation does not support per-scenario "
-                         "availability plans (full-batch, unsharded only)")
     f32 = lambda a: jnp.asarray(a, jnp.float32)
     if mesh is not None:
         fns = _sharded_fns(mesh)
         chain_fn, task_fn = fns["chain"], fns["task"]
+        chain_ps_fn, task_ps_fn = fns["chain_ps"], fns["task_ps"]
         scalar = jnp.float32
     else:
         chain_fn, task_fn = _chain_batch, _task_batch
+        chain_ps_fn, task_ps_fn = _chain_batch_ps, _task_batch_ps
         scalar = lambda x: x
 
     sfx = ":sharded" if mesh is not None else ""
     for bid in gplan.bids:
         groups = gplan.groups_for_bid(bid)
-        with span("eval.bid", bid=bid, groups=len(groups)):
+        G = len(groups)
+        # Group padding for the "model" axis: repeat the LAST group so
+        # every model shard owns the same number of whole groups. Padded
+        # groups are real (duplicated) work, masked at the splice below.
+        Gp = mesh.pad_groups(G) if mesh is not None else G
+        gpad = groups if Gp == G else groups + [groups[-1]] * (Gp - G)
+        with span("eval.bid", bid=bid, groups=G):
             # (rows, n_slots+1) stacked views, cached on the batch per
             # bid — already-f32 device tensors when the chunk was
             # synthesized on device (a spec source), host f64 otherwise;
-            # padded + sharded under a mesh.
+            # padded + sharded over "data" under a mesh.
             A, C = batch.stacked(bid)
             A, C = f32(A), f32(C)
-            ends = concat_rows([g.plan.ends for g in groups])
+            ends = concat_rows([g.plan.ends for g in gpad])
             if ps:
-                z_t = scenario_cat(groups, "z_t", S)
-                d_eff = scenario_cat(groups, "d_eff", S)
+                z_t = _scen_rows(scenario_cat(gpad, "z_t", S), rows)
+                d_eff = _scen_rows(scenario_cat(gpad, "d_eff", S), rows)
             else:
-                z_t = concat_rows([g.z_t for g in groups])
-                d_eff = concat_rows([g.d_eff for g in groups])
+                z_t = concat_rows([g.z_t for g in gpad])
+                d_eff = concat_rows([g.d_eff for g in gpad])
             if early_start:
-                arrival = np.tile(gplan.arrival, len(groups))
+                arrival = np.tile(gplan.arrival, Gp)
                 if ps:
-                    pins = scenario_cat(groups, "pins", S)
+                    pins = _scen_rows(scenario_cat(gpad, "pins", S), rows)
                     args = (A, C, f32(arrival), f32(ends), f32(z_t),
-                            f32(d_eff), jnp.asarray(pins), p_od, slot)
-                    record_jit("engine.eval.chain_ps", _chain_batch_ps,
+                            f32(d_eff), jnp.asarray(pins), scalar(p_od),
+                            scalar(slot))
+                    record_jit("engine.eval.chain_ps" + sfx, chain_ps_fn,
                                *args)
-                    res = _chain_batch_ps(*args)
+                    res = chain_ps_fn(*args)
                 else:
-                    pins = concat_rows([g.pins for g in groups])
+                    pins = concat_rows([g.pins for g in gpad])
                     args = (A, C, f32(arrival), f32(ends), f32(z_t),
                             f32(d_eff), jnp.asarray(pins), scalar(p_od),
                             scalar(slot))
                     record_jit("engine.eval.chain" + sfx, chain_fn, *args)
                     res = chain_fn(*args)
             else:
-                starts = concat_rows([g.plan.starts for g in groups])
+                starts = concat_rows([g.plan.starts for g in gpad])
                 R, L = ends.shape
                 if ps:
                     args = (A, C, f32(starts.ravel()), f32(ends.ravel()),
-                            f32(z_t.reshape(S, R * L)),
-                            f32(d_eff.reshape(S, R * L)), p_od, slot)
-                    record_jit("engine.eval.task_ps", _task_batch_ps, *args)
-                    res = _task_batch_ps(*args)
+                            f32(z_t).reshape(rows, R * L),
+                            f32(d_eff).reshape(rows, R * L), scalar(p_od),
+                            scalar(slot))
+                    record_jit("engine.eval.task_ps" + sfx, task_ps_fn,
+                               *args)
+                    res = task_ps_fn(*args)
                 else:
                     args = (A, C, f32(starts.ravel()), f32(ends.ravel()),
                             f32(z_t.reshape(R * L)),
@@ -191,11 +233,12 @@ def run(gplan, batch, early_start: bool, out, mesh=None) -> None:
                     res = task_fn(*args)
                 res = {k: v.reshape(rows, R, L).sum(axis=2)
                        for k, v in res.items() if k != "finish"}
-            shape = (S, len(groups), J)
+            shape = (S, Gp, J)
             for key in ("spot_cost", "ondemand_cost", "spot_work",
                         "ondemand_work"):
                 # [:S] drops the mesh padding rows (duplicates of the last
-                # scenario) before the host scatter.
+                # scenario) before the host scatter; indexing only the
+                # real ``groups`` below masks the padded group lanes.
                 vals = np.asarray(res[key], np.float64)[:S].reshape(shape)
                 for gi, g in enumerate(groups):
                     out[key][:, :, g.policy_idx] = vals[:, gi, :, None]

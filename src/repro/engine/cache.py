@@ -10,9 +10,12 @@ path:
 * ``PLAN_CACHE`` — cross-call LRU of built ``EvalGroup`` records, keyed on
   the SAME dedup signature the plan layer uses within one grid
   (window key, rounded beta_0, ``round(bid, 12)``) plus the jobs
-  fingerprint and pool configuration. ``plan.build_grid_plan`` consults it
-  per *group*, so a second call with an overlapping grid rebuilds only the
-  new groups (and a fully-overlapping one rebuilds nothing).
+  fingerprint, pool configuration, and — when a ``GridMesh`` is in play —
+  the mesh's (data, model) shard partition, so a warm hit only ever hands
+  back buffers built for the identical sharding and stays bitwise.
+  ``plan.build_grid_plan`` consults it per *group*, so a second call with
+  an overlapping grid rebuilds only the new groups (and a
+  fully-overlapping one rebuilds nothing).
 * ``VIEW_CACHE`` — cross-call LRU of stacked scenario views keyed on
   (spec, chunk range, device, ``round(bid, 12)``); the per-batch memo in
   ``scenarios.ScenarioBatch.stacked`` dies with the batch, this one

@@ -1,19 +1,31 @@
-"""Scenario-axis device mesh (DESIGN.md §9).
+"""Scenario x policy-group device mesh (DESIGN.md §9).
 
 The scenario axis is embarrassingly parallel — each scenario's price path,
 per-bid views, and counterfactual costs are independent; only the regret
-fold crosses scenarios — so sharding it is pure data parallelism: a 1-D
-mesh whose single axis is named ``"data"`` (matching ``launch/mesh.py``'s
-production meshes, where a future 2-D scenario x bid layout would add the
-``"model"`` axis), with the logical axis ``scenario -> "data"`` routed
-through the ``distributed/sharding.py`` rule table.
+fold crosses scenarios — so sharding it is pure data parallelism along a
+mesh axis named ``"data"``.  The eval-group axis (bid x policy-group rows
+of the grid plan) is *also* independent per group, so grids whose group
+axis dwarfs S (exp1's 175-policy sweeps) shard it along a second mesh axis
+named ``"model"`` — the same data/model two-axis decomposition as
+``launch/mesh.py``'s production meshes.  Logical axes ``scenario ->
+"data"`` and ``group -> "model"`` are routed through the
+``distributed/sharding.py`` rule table; a 1-wide ``"model"`` axis
+reproduces the 1-D behavior bitwise.
 
-``ScenarioMesh`` is hashable (it keys the backends' compiled-program
-caches) and owns the padding contract: a chunk of K scenarios is padded to
-``pad(K)`` rows — the LAST row repeated — so every shard holds the same
-row count; padded rows carry real (duplicated) scenario data, are masked
-out of every reduction, and are sliced off before results reach the
-caller. See DESIGN.md §9 for the placement diagram.
+``GridMesh`` is hashable (it keys the backends' compiled-program caches)
+and owns the padding contract for BOTH axes:
+
+* scenario axis — a chunk of K scenarios is padded to ``pad(K)`` rows,
+  the LAST row repeated, so every ``"data"`` shard holds the same row
+  count;
+* group axis — the eval-group list is padded to ``pad_groups(G)`` entries,
+  the LAST group repeated, so every ``"model"`` shard owns the same number
+  of whole groups.
+
+Padded lanes carry real (duplicated) data, are masked out of every
+reduction, and are sliced off at the splice before results reach the
+caller (:func:`edge_repeat` / the ``[:K]`` and ``[:, :G]`` slices).  See
+DESIGN.md §9 for the placement diagram.
 
 This module imports jax lazily so ``repro.engine`` stays importable in
 environments without it (the numpy oracle path).
@@ -27,27 +39,63 @@ from typing import Any
 
 import numpy as np
 
-__all__ = ["ScenarioMesh", "as_scenario_mesh"]
+__all__ = [
+    "GridMesh", "ScenarioMesh", "as_scenario_mesh", "pad_to", "edge_repeat",
+]
+
+_OVERRIDES = {"scenario": "data", "group": "model", "bid": None}
+
+# Once-per-process clamp-warning keys: (requested data, requested model,
+# visible devices).  A sweep that builds the same over-subscribed mesh in
+# every cell warns exactly once per distinct request shape.
+_CLAMP_WARNED: set[tuple[int, int, int]] = set()
+
+
+def pad_to(k: int, n: int) -> int:
+    """Smallest multiple of ``n`` that is ``>= k`` (the padded lane count)."""
+    return -(-k // n) * n
+
+
+def edge_repeat(a: np.ndarray, rows: int) -> np.ndarray:
+    """Pad the leading axis to ``rows`` by repeating the last entry.
+
+    The padding contract for both mesh axes: padded lanes are real
+    (duplicated) data, never NaN/zero filler, so every shard computes a
+    well-posed problem and the splice just drops the extra lanes.
+    """
+    k = a.shape[0]
+    if rows == k:
+        return a
+    if rows < k:
+        raise ValueError(f"cannot pad {k} rows down to {rows}")
+    reps = np.repeat(a[-1:], rows - k, axis=0)
+    return np.concatenate([a, reps], axis=0)
 
 
 @dataclasses.dataclass(frozen=True)
-class ScenarioMesh:
-    """A 1-D ``"data"`` mesh over devices plus its logical-axis rule table.
+class GridMesh:
+    """A 2-D ``("data", "model")`` mesh plus its logical-axis rule table.
 
     Frozen and hashable — ``backend_jax`` and the learn-fold cache one
-    compiled ``shard_map`` program per (mesh, shape) key.
+    compiled ``shard_map`` program per (mesh, shape) key.  A 1-D raw
+    ``"data"`` mesh (or ``model_devices=1``) degrades to pure scenario
+    data-parallelism, bitwise identical to the pre-2-D behavior.
     """
 
     mesh: Any                 # jax.sharding.Mesh (hashable)
     rules: Any                # distributed.sharding.ShardingRules
 
     @classmethod
-    def create(cls, n_devices: int | None = None) -> "ScenarioMesh":
-        """Mesh over ``n_devices`` (default: all), clamped to what exists.
+    def create(cls, n_devices: int | None = None,
+               model_devices: int = 1) -> "GridMesh":
+        """Mesh of ``n_devices x model_devices``, clamped to what exists.
 
-        Clamping warns rather than raises so ``--mesh 8`` scripts run
-        unchanged on a 1-device box (the 1-device mesh is bit-identical to
-        the unsharded path).
+        ``n_devices`` (default: all remaining after the model axis) shards
+        the scenario axis as ``"data"``; ``model_devices`` shards the
+        eval-group axis as ``"model"``.  Clamping warns (once per process
+        per request shape) rather than raises so ``--mesh 8`` scripts run
+        unchanged on a 1-device box (the 1x1 mesh is bit-identical to the
+        unsharded path).
         """
         import jax
 
@@ -55,32 +103,57 @@ class ScenarioMesh:
         from repro.launch.mesh import make_mesh
 
         avail = len(jax.devices())
-        n = avail if n_devices is None else int(n_devices)
+        m = int(model_devices)
+        if m < 1:
+            raise ValueError(
+                f"mesh needs >= 1 model device (got {model_devices})")
+        n = max(avail // m, 1) if n_devices is None else int(n_devices)
         if n < 1:
             raise ValueError(f"mesh needs >= 1 device (got {n_devices})")
-        if n > avail:
-            warnings.warn(
-                f"requested a {n}-way scenario mesh but only {avail} "
-                f"device(s) are visible — clamping to {avail} (set "
-                f"XLA_FLAGS=--xla_force_host_platform_device_count=N to "
-                f"fake N host devices on CPU)", stacklevel=2)
-            n = avail
-        mesh = make_mesh((n,), ("data",))
-        rules = ShardingRules.create(
-            mesh, overrides={"scenario": "data", "bid": None})
+        if n * m > avail:
+            key = (n, m, avail)
+            if key not in _CLAMP_WARNED:
+                _CLAMP_WARNED.add(key)
+                warnings.warn(
+                    f"requested a {n}x{m} ({n * m}-device) scenario x group "
+                    f"mesh but only {avail} device(s) are visible — "
+                    f"clamping to {avail} (set "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count=N to "
+                    f"fake N host devices on CPU)", stacklevel=2)
+            m = min(m, avail)
+            n = max(avail // m, 1)
+        shape, axes = ((n, m), ("data", "model")) if m > 1 else \
+            ((n,), ("data",))
+        mesh = make_mesh(shape, axes)
+        rules = ShardingRules.create(mesh, overrides=_OVERRIDES)
         return cls(mesh=mesh, rules=rules)
 
     @property
     def n_shards(self) -> int:
         return self.mesh.devices.size
 
+    @property
+    def data_shards(self) -> int:
+        """Shards along the scenario (``"data"``) axis."""
+        return self.mesh.shape["data"]
+
+    @property
+    def model_shards(self) -> int:
+        """Shards along the eval-group (``"model"``) axis (1 on 1-D meshes)."""
+        return self.mesh.shape.get("model", 1)
+
     def pad(self, k: int) -> int:
-        """Rows after padding k scenarios to a multiple of the shard count."""
-        n = self.n_shards
-        return -(-k // n) * n
+        """Rows after padding k scenarios to a multiple of ``data_shards``."""
+        return pad_to(k, self.data_shards)
+
+    def pad_groups(self, g: int) -> int:
+        """Entries after padding g eval groups to a multiple of
+        ``model_shards`` (whole groups per ``"model"`` shard)."""
+        return pad_to(g, self.model_shards)
 
     def spec(self, *logical_axes: str | None):
-        """PartitionSpec through the rule table (``"scenario" -> "data"``)."""
+        """PartitionSpec through the rule table (``"scenario" -> "data"``,
+        ``"group" -> "model"``)."""
         return self.rules.spec(*logical_axes)
 
     def sharding(self, *logical_axes: str | None):
@@ -92,35 +165,37 @@ class ScenarioMesh:
     def pad_rows(self, a: np.ndarray) -> np.ndarray:
         """Pad a leading-scenario host array to ``pad(len)`` rows (repeat
         the last row — real data, masked/sliced away downstream)."""
-        k = a.shape[0]
-        kp = self.pad(k)
-        if kp == k:
-            return a
-        reps = np.repeat(a[-1:], kp - k, axis=0)
-        return np.concatenate([a, reps], axis=0)
+        return edge_repeat(a, self.pad(a.shape[0]))
 
     def put_rows(self, a):
-        """Pad + device_put a leading-scenario array sharded over the mesh."""
+        """Pad + device_put a leading-scenario array sharded over the mesh
+        (``"data"`` only; replicated over ``"model"``)."""
         import jax
 
         return jax.device_put(self.pad_rows(np.asarray(a)),
                               self.sharding("scenario"))
 
 
-def as_scenario_mesh(mesh) -> ScenarioMesh | None:
+# PR 6 name; every ``mesh=`` call site accepts both.  The 1-D scenario
+# mesh IS a GridMesh with a 1-wide (absent) "model" axis.
+ScenarioMesh = GridMesh
+
+
+def as_scenario_mesh(mesh) -> GridMesh | None:
     """Normalize every accepted ``mesh=`` argument.
 
-    Accepts ``None`` (unsharded), a ``ScenarioMesh``, an int (shard count,
-    clamped to available devices), or a raw jax ``Mesh`` whose axes include
-    ``"data"``.
+    Accepts ``None`` (unsharded), a ``GridMesh``/``ScenarioMesh``, an int
+    (scenario-shard count, clamped to available devices), or a raw jax
+    ``Mesh`` whose axes include ``"data"`` (a ``"model"`` axis, when
+    present, shards the eval-group axis).
     """
-    if mesh is None or isinstance(mesh, ScenarioMesh):
+    if mesh is None or isinstance(mesh, GridMesh):
         return mesh
     if isinstance(mesh, bool):
         raise ValueError(f"mesh must be None, an int shard count, a "
-                         f"ScenarioMesh, or a jax Mesh (got {mesh!r})")
+                         f"GridMesh, or a jax Mesh (got {mesh!r})")
     if isinstance(mesh, (int, np.integer)):
-        return ScenarioMesh.create(int(mesh))
+        return GridMesh.create(int(mesh))
     try:
         from jax.sharding import Mesh
     except Exception as e:  # pragma: no cover - jax-less environment
@@ -132,11 +207,10 @@ def as_scenario_mesh(mesh) -> ScenarioMesh | None:
             raise ValueError(
                 f"scenario mesh needs a 'data' axis (got axes "
                 f"{tuple(mesh.axis_names)}); build one with "
-                f"ScenarioMesh.create(n) or make_mesh((n,), ('data',))")
+                f"GridMesh.create(n) or make_mesh((n,), ('data',))")
         from repro.distributed.sharding import ShardingRules
 
-        rules = ShardingRules.create(
-            mesh, overrides={"scenario": "data", "bid": None})
-        return ScenarioMesh(mesh=mesh, rules=rules)
+        rules = ShardingRules.create(mesh, overrides=_OVERRIDES)
+        return GridMesh(mesh=mesh, rules=rules)
     raise ValueError(f"mesh must be None, an int shard count, a "
-                     f"ScenarioMesh, or a jax Mesh (got {type(mesh)})")
+                     f"GridMesh, or a jax Mesh (got {type(mesh)})")

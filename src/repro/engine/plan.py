@@ -260,6 +260,7 @@ def build_grid_plan(
     slots_per_unit: int = 12,
     n_scenarios: int | None = None,
     plan_backend: str = "host",
+    mesh=None,
 ) -> GridPlan:
     """Deduplicate (jobs x policies) into evaluation groups.
 
@@ -274,6 +275,10 @@ def build_grid_plan(
     policy (the realized ``run_jobs`` semantics used by fixed-policy sweeps).
     ``plan_backend="device"`` builds the plan tensors as one fused jit
     program (see module docstring); requires jax and ``pool="dedicated"``.
+    ``mesh`` (a ``GridMesh``) does not change the built tensors, but its
+    (data, model) partition joins the cross-call plan-cache key: a cached
+    group's device buffers are only reused by calls that will shard them
+    identically, so warm hits stay bitwise per partition.
     """
     if pool not in ("dedicated", "shared"):
         raise ValueError(f"unknown pool mode {pool!r}")
@@ -296,15 +301,18 @@ def build_grid_plan(
     # Availability queries are opaque host callables — their results have
     # no fingerprint, so refined plans never enter the cross-call cache.
     use_cache = availability is None and _cache.enabled()
+    mesh_part = None if mesh is None else (mesh.data_shards,
+                                           mesh.model_shards)
     if plan_backend == "device":
         return _build_grid_plan_device(jobs, policies, structure, arrays,
                                        r_total, windows, selfowned,
                                        availability, jobs_fp=jobs_fp,
-                                       use_cache=use_cache)
+                                       use_cache=use_cache,
+                                       mesh_part=mesh_part)
     return _build_grid_plan_host(jobs, policies, structure, arrays, r_total,
                                  windows, selfowned, pool, availability,
                                  slots_per_unit, jobs_fp=jobs_fp,
-                                 use_cache=use_cache)
+                                 use_cache=use_cache, mesh_part=mesh_part)
 
 
 def _cache_lookup(s: _GridStructure, base: tuple, use_cache: bool):
@@ -329,9 +337,12 @@ def _cache_lookup(s: _GridStructure, base: tuple, use_cache: bool):
 def _build_grid_plan_host(jobs, policies, s: _GridStructure, arrays, r_total,
                           windows, selfowned, pool, availability,
                           slots_per_unit, jobs_fp: str = "",
-                          use_cache: bool = False) -> GridPlan:
+                          use_cache: bool = False,
+                          mesh_part=None) -> GridPlan:
+    # ``mesh_part`` partitions the cache by (data, model) shard counts so a
+    # warm hit never hands one partition another partition's buffers.
     base = (jobs_fp, float(r_total), windows, selfowned, pool,
-            int(slots_per_unit), "host")
+            int(slots_per_unit), "host", mesh_part)
     cached, miss = _cache_lookup(s, base, use_cache)
     need_ai = sorted({s.g_akey[gi] for gi in miss})
     need_w = sorted({s.a_plan[ai] for ai in need_ai})
@@ -498,7 +509,8 @@ def _device_plan_fns(selfowned_mode: str, windows: str):
 def _build_grid_plan_device(jobs, policies, s: _GridStructure, arrays,
                             r_total, windows, selfowned, availability,
                             jobs_fp: str = "",
-                            use_cache: bool = False) -> GridPlan:
+                            use_cache: bool = False,
+                            mesh_part=None) -> GridPlan:
     import jax
     import jax.numpy as jnp
 
@@ -518,7 +530,7 @@ def _build_grid_plan_device(jobs, policies, s: _GridStructure, arrays,
     if availability is None or r_total <= 0:
         return _device_query_free(jobs, policies, s, arrays, r_total,
                                   windows, selfowned, xs, fns, jobs_fp,
-                                  use_cache)
+                                  use_cache, mesh_part=mesh_part)
     plan_of_akey = np.asarray(s.a_plan, np.int32)
     b0 = np.asarray([np.nan if b is None else b for b in s.a_beta0])
     akey_of_group = np.asarray(s.g_akey, np.int32)
@@ -575,7 +587,7 @@ def _build_grid_plan_device(jobs, policies, s: _GridStructure, arrays,
 
 def _device_query_free(jobs, policies, s: _GridStructure, arrays, r_total,
                        windows, selfowned, xs, fns, jobs_fp: str,
-                       use_cache: bool) -> GridPlan:
+                       use_cache: bool, mesh_part=None) -> GridPlan:
     """The default (query-free) device plan path, cache-aware.
 
     Misses run through the SAME fused jit program as before, over the
@@ -586,7 +598,8 @@ def _device_query_free(jobs, policies, s: _GridStructure, arrays, r_total,
     """
     import jax
 
-    base = (jobs_fp, float(r_total), windows, selfowned, "device")
+    base = (jobs_fp, float(r_total), windows, selfowned, "device",
+            mesh_part)
     cached, miss = _cache_lookup(s, base, use_cache)
     need_ai = sorted({s.g_akey[gi] for gi in miss})
     ai_pos = {ai: i for i, ai in enumerate(need_ai)}

@@ -373,11 +373,13 @@ def _device_synth_fn(spec: ScenarioSpec, mesh=None):
     f32 evaluation of the same transform (value noise ~1e-7, harmless —
     availability never reads them, see ``_device_views_fn``).
 
-    With ``mesh`` (a ``ScenarioMesh``) the generator is ``shard_map``ed
-    over the scenario axis: each shard hashes only its own GLOBAL indices,
-    so per-shard synthesis is bit-identical to monolithic by construction
-    and the program contains zero cross-device collectives (asserted in
-    tests/test_shard.py). Row counts must be padded to the shard count —
+    With ``mesh`` (a ``GridMesh``) the generator is ``shard_map``ed over
+    the scenario axis — ``"data"`` only; on a 2-D mesh the ``"model"``
+    axis sees replicated synthesis, since groups don't exist yet at this
+    stage. Each shard hashes only its own GLOBAL indices, so per-shard
+    synthesis is bit-identical to monolithic by construction and the
+    program contains zero cross-device collectives (asserted in
+    tests/test_shard.py). Row counts must be padded to ``data_shards`` —
     ``SynthBatch`` owns that contract.
     """
     import jax
@@ -487,10 +489,11 @@ class ScenarioBatch:
     repeated calls hand back the same arrays). ``markets`` lazily adapts
     the chunk to host-only consumers (the numpy oracle backend).
 
-    With a ``ScenarioMesh`` the stacked tensors are padded to ``n_rows``
-    (a multiple of the shard count; the last scenario repeated) and placed
-    sharded over the mesh's ``"data"`` axis — consumers slice results back
-    to ``n_scenarios`` valid rows (the DESIGN.md §9 padding contract).
+    With a ``GridMesh`` the stacked tensors are padded to ``n_rows``
+    (a multiple of ``data_shards``; the last scenario repeated) and placed
+    sharded over the mesh's ``"data"`` axis (replicated over ``"model"``)
+    — consumers slice results back to ``n_scenarios`` valid rows (the
+    DESIGN.md §9 padding contract).
     """
 
     slot: float

@@ -212,8 +212,12 @@ def _sharded_fold(smesh, kinds_sig: tuple, ring: int, k0_pos: int):
     ``(kind, n_instances)``), computes the per-scenario regret statistics
     locally, masks the padding rows via ``valid``, reduces over its local
     scenario axis, and packs every per-learner sum into ONE flat vector so
-    the chunk's entire cross-device traffic is a single ``lax.psum`` — the
-    one collective the DESIGN.md §9 contract allows per chunk. The second
+    the chunk's entire cross-device traffic is a single ``lax.psum`` over
+    the ``"data"`` axis — the one collective the DESIGN.md §9 contract
+    allows per chunk. On a 2-D ``GridMesh`` the ``"model"`` axis sees
+    replicated inputs (specs below never mention it), so every model
+    column computes identical sums and the psum stays ONE all-reduce over
+    ``"data"`` only — the group axis adds no traffic. The second
     output (per-scenario realized regret of original learner 0, position
     ``k0_pos`` in grouped order) stays sharded — it is the adaptive
     adversary's feedback signal and never crosses devices.
@@ -482,11 +486,12 @@ def replay_stream(
     ``LearnResult`` is folded into a ``StreamLearnResult`` — running at
     S = 10^4-10^6 scenarios with chunk-sized peak memory.
 
-    ``mesh`` (a ``ScenarioMesh`` / shard count / ``None``) shards the
+    ``mesh`` (a ``GridMesh`` / shard count / ``None``) shards the
     scenario axis across a device mesh: the engine chunk is evaluated
-    sharded (DESIGN.md §9) AND the replay fold runs as a ``shard_map``
-    program whose only cross-device communication is one ``psum`` of the
-    packed per-learner sums per chunk (``_sharded_fold``). The fold's
+    sharded (DESIGN.md §9 — over BOTH axes of a 2-D mesh) AND the replay
+    fold runs as a ``shard_map`` program whose only cross-device
+    communication is one ``psum`` of the packed per-learner sums per
+    chunk, over ``"data"`` only (``_sharded_fold``). The fold's
     device arithmetic is float32, so its statistics agree with the host
     fold to ~1e-4 rather than bitwise. Requires jax replay and engine
     backends. ``overlap`` double-buffers chunk synthesis (see

@@ -23,7 +23,10 @@ compiled-fn factory in the engine/learn stack, so a snapshot shows both
 Keys in use (see DESIGN.md Section 10): ``plan.device.full``,
 ``scenarios.synth:<kind>[:sharded]``, ``scenarios.views[:sharded]``,
 ``engine.eval.chain[:sharded]``, ``engine.eval.task[:sharded]``,
-``learn.scan:<kind>``, ``learn.fold:sharded``.
+``engine.eval.chain_ps[:sharded]``, ``engine.eval.task_ps[:sharded]``
+(the per-scenario-availability refinement programs, sharded over both
+axes of a 2-D ``GridMesh``), ``learn.scan:<kind>``,
+``learn.fold:sharded``.
 """
 from __future__ import annotations
 
@@ -189,7 +192,9 @@ def placement_violations(mesh=None, keys=None):
 
     Delegates to the Layer-2 verifier in :mod:`repro.analysis.programs` —
     the single implementation of the placement contract — and returns only
-    the failed :class:`CheckResult`s (empty list = contract holds).
+    the failed :class:`CheckResult`s (empty list = contract holds).  Pass
+    a 2-D ``GridMesh`` to assert the scenario x group placement (the
+    refinement ``_ps`` programs included).
     """
     from repro.analysis.programs import verify_all
 

@@ -1,12 +1,15 @@
-"""Sharded scenario axis (DESIGN.md §9): ScenarioMesh, shard_map'ed
-jobs -> cost -> regret, padding contract, and the one-psum-per-chunk rule.
+"""Sharded scenario x group axes (DESIGN.md §9): GridMesh, shard_map'ed
+jobs -> cost -> regret, the two-axis padding contract, and the
+one-psum-per-chunk rule.
 
 Fast tests run in-process on whatever devices are visible (a 1-device mesh
 is the degenerate case and must be BITWISE identical to the unsharded jax
 path — same program, same f32 arithmetic). Multi-device behavior (real
-sharding, padding of S % n_shards != 0) runs in a slow subprocess test that
-forces 8 host devices, because the XLA device-count flag must be set before
-jax initializes.
+2-D sharding, padding of S % data_shards != 0 and G % model_shards != 0,
+sharded refinement rounds) runs in-process when 8 devices are visible (the
+shard-smoke CI job forces 8 host devices) and in a slow subprocess test
+that forces them itself, because the XLA device-count flag must be set
+before jax initializes.
 """
 
 import json
@@ -19,6 +22,7 @@ import pytest
 
 from repro.core import generate_chain_jobs, selfowned_policies
 from repro.engine import (
+    GridMesh,
     ScenarioMesh,
     ScenarioSpec,
     as_scenario_mesh,
@@ -58,15 +62,82 @@ def test_mesh_create_defaults_and_padding():
     assert np.array_equal(padded[5:], np.repeat(a[-1:], len(padded) - 5, 0))
 
 
+def test_mesh_2d_axes_and_group_padding():
+    # GridMesh generalizes ScenarioMesh (same class): a second logical
+    # axis group -> "model" with its own whole-group padding contract.
+    assert GridMesh is ScenarioMesh
+    mesh = GridMesh.create(1)          # 1-D: model axis absent, 1-wide
+    assert mesh.data_shards == 1
+    assert mesh.model_shards == 1
+    assert mesh.pad_groups(5) == 5
+    from repro.engine.mesh import edge_repeat, pad_to
+    assert pad_to(13, 4) == 16 and pad_to(8, 4) == 8 and pad_to(0, 3) == 0
+    a = np.arange(6.0).reshape(3, 2)
+    p = edge_repeat(a, 5)
+    assert p.shape == (5, 2)
+    assert np.array_equal(p[3:], np.repeat(a[-1:], 2, axis=0))
+    with pytest.raises(ValueError):
+        edge_repeat(a, 2)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 devices")
+@pytest.mark.parametrize("shape", [(4, 2), (2, 4)])
+def test_mesh_2d_create(shape):
+    n, m = shape
+    mesh = GridMesh.create(n, m)
+    assert mesh.n_shards == n * m
+    assert (mesh.data_shards, mesh.model_shards) == (n, m)
+    assert tuple(mesh.mesh.axis_names) == ("data", "model")
+    # scenario rows pad to data_shards, groups to model_shards
+    assert mesh.pad(n + 1) == 2 * n
+    assert mesh.pad_groups(m + 1) == 2 * m
+    # logical-axis routing: scenario -> data, group -> model
+    from jax.sharding import PartitionSpec as P
+    assert mesh.spec("scenario") == P("data")
+    assert mesh.spec("group") == P("model")
+    assert mesh.spec("scenario", "group") == P("data", "model")
+    # a raw 2-D jax Mesh normalizes too
+    from repro.launch.mesh import make_mesh
+    got = as_scenario_mesh(make_mesh(shape, ("data", "model")))
+    assert (got.data_shards, got.model_shards) == shape
+
+
+def _clear_clamp_dedupe():
+    from repro.engine import mesh as mesh_mod
+
+    mesh_mod._CLAMP_WARNED.clear()
+
+
 def test_mesh_create_clamps_with_warning():
+    _clear_clamp_dedupe()
     avail = len(jax.devices())
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         mesh = ScenarioMesh.create(avail + 7)
     assert mesh.n_shards == avail
-    assert any("clamping" in str(x.message) for x in w)
-    assert any("xla_force_host_platform_device_count" in str(x.message)
-               for x in w)
+    msgs = [str(x.message) for x in w]
+    assert any("clamping" in s for s in msgs)
+    assert any("xla_force_host_platform_device_count" in s for s in msgs)
+    # the message names both the requested and the visible device counts
+    assert any(str(avail + 7) in s and str(avail) in s for s in msgs)
+
+
+def test_mesh_clamp_warning_dedupes_per_process():
+    # A sweep building the same over-subscribed mesh in every cell warns
+    # exactly ONCE per distinct (requested, visible) key — not per call.
+    _clear_clamp_dedupe()
+    avail = len(jax.devices())
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ScenarioMesh.create(avail + 7)
+        ScenarioMesh.create(avail + 7)
+        ScenarioMesh.create(avail + 7)
+    assert len([x for x in w if "clamping" in str(x.message)]) == 1
+    # a DIFFERENT over-subscription is a new key and warns again
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ScenarioMesh.create(avail + 9)
+    assert len([x for x in w if "clamping" in str(x.message)]) == 1
 
 
 def test_as_scenario_mesh_normalization():
@@ -108,14 +179,32 @@ def test_mesh_rejects_non_jax_backends():
         evaluate_grid(jobs, GRID, spec, 300, backend="pallas", mesh=mesh)
 
 
-def test_mesh_rejects_per_scenario_availability():
+def _per_scenario_avails(S, J):
+    """Deterministic per-scenario availability queries (one per scenario,
+    distinct results) shaped like TOLA's realized-residual queries."""
+    def make(s):
+        return lambda starts, ends: np.full_like(
+            np.asarray(starts, np.float64), float(s % 3))
+    return [make(s) for s in range(S)]
+
+
+def test_mesh_shards_per_scenario_availability():
+    # Refined (per-scenario availability) plans evaluate SHARDED since the
+    # 2-D GridMesh landed: the (S, R, L) self-owned stacks ride the "data"
+    # axis next to the views. 1-device mesh: bitwise == unsharded jax;
+    # both within 1e-5 of the f64 numpy oracle.
     jobs, horizon = _setup()
-    markets = make_scenarios(horizon, 2, seed=1)
-    mesh = ScenarioMesh.create(1)
-    avail = [[(0.0, 5.0, 1)] for _ in markets]
-    with pytest.raises(ValueError, match="availability"):
-        evaluate_grid(jobs, GRID, markets, 300, backend="jax", mesh=mesh,
-                      availability=avail)
+    markets = make_scenarios(horizon, 3, seed=1)
+    avail = _per_scenario_avails(len(markets), len(jobs))
+    oracle = evaluate_grid(jobs, GRID, markets, 300, backend="numpy",
+                           availability=avail).unit_cost
+    ref = evaluate_grid(jobs, GRID, markets, 300, backend="jax",
+                        availability=avail).unit_cost
+    got = evaluate_grid(jobs, GRID, markets, 300, backend="jax",
+                        availability=avail,
+                        mesh=ScenarioMesh.create(1)).unit_cost
+    assert np.array_equal(ref, got)
+    assert np.abs(got - oracle).max() < 1e-5
 
 
 def test_overlap_rejects_reactive_stream():
@@ -257,13 +346,36 @@ def test_run_tola_scenarios_accepts_mesh():
     jobs, horizon = _setup(n=12)
     markets = make_scenarios(horizon, 2, seed=1)
     ref = run_tola_scenarios(jobs, GRID, markets, r_total=300, seed=0,
-                             backend="jax")
-    # mesh applies to round 0 only; refinement rounds are per-scenario
+                             pool_iters=2, backend="jax")
+    # the mesh rides EVERY round now — round 0 and the per-scenario
+    # refinement rounds alike (DESIGN.md §9); 1-device mesh is bitwise
     got = run_tola_scenarios(jobs, GRID, markets, r_total=300, seed=0,
-                             backend="jax", mesh=ScenarioMesh.create(1))
+                             pool_iters=2, backend="jax",
+                             mesh=ScenarioMesh.create(1))
     for a, b in zip(ref, got):
         assert np.array_equal(a.cost_matrix, b.cost_matrix)
         assert np.array_equal(a.chosen, b.chosen)
+
+
+def test_run_tola_scenarios_mesh_fallback_warns(monkeypatch):
+    # Regression (PR 10 satellite): a dropped mesh is NEVER silent. With
+    # the sharded per-scenario path disabled, refinement rounds fall back
+    # to unsharded evaluation and say so.
+    from repro.core import run_tola_scenarios
+    from repro.engine import backend_jax
+
+    jobs, horizon = _setup(n=12)
+    markets = make_scenarios(horizon, 2, seed=1)
+    ref = run_tola_scenarios(jobs, GRID, markets, r_total=300, seed=0,
+                             pool_iters=1, backend="jax")
+    monkeypatch.setattr(backend_jax, "SHARDED_PS", False)
+    with pytest.warns(UserWarning, match="dropping mesh=.*SHARDED_PS"):
+        got = run_tola_scenarios(jobs, GRID, markets, r_total=300, seed=0,
+                                 pool_iters=1, backend="jax",
+                                 mesh=ScenarioMesh.create(1))
+    # the fallback still computes the same answer, just unsharded
+    for a, b in zip(ref, got):
+        assert np.array_equal(a.cost_matrix, b.cost_matrix)
 
 
 def test_sweep_policies_accepts_mesh():
@@ -305,6 +417,28 @@ def test_cost_program_has_zero_collectives():
         assert "'total': 0" in c.detail
 
 
+def test_refinement_program_has_zero_collectives():
+    # The per-scenario (pool refinement) programs obey the same contract:
+    # the (S, R, L) self-owned stacks shard alongside the views and no
+    # axis reduces cross-device — refinement rounds cost zero collectives.
+    checks = _verify(["engine.eval.chain_ps:sharded",
+                      "engine.eval.task_ps:sharded"])
+    colls = [c for c in checks if c.check == "collectives"]
+    assert len(colls) == 2
+    for c in colls:
+        assert "'total': 0" in c.detail
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 devices")
+@pytest.mark.parametrize("shape", [(4, 2), (2, 4)])
+def test_2d_placement_contract(shape):
+    # The §9 standing metric on a REAL 2-D mesh: every canonical program
+    # (refinement included) placed per contract, zero violations.
+    from repro.obs.compiled import placement_violations
+
+    assert placement_violations(mesh=GridMesh.create(*shape)) == []
+
+
 def test_synth_program_has_zero_collectives():
     checks = _verify(["scenarios.synth:fresh:sharded"])
     (coll,) = [c for c in checks if c.check == "collectives"]
@@ -331,6 +465,52 @@ def test_placement_violations_empty_on_contract():
 
 
 # --------------------------------------------------------------------------
+# Real 2-D sharding in-process (the shard-smoke CI job forces 8 devices)
+# --------------------------------------------------------------------------
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 devices")
+@pytest.mark.parametrize("shape", [(4, 2), (2, 4)])
+def test_2d_mesh_eval_parity(shape):
+    # S=13 % data_shards != 0 AND (with 7 policies) G % model_shards != 0:
+    # both padding contracts at once. Bitwise vs unsharded jax (no
+    # cross-lane arithmetic anywhere in the cost tensor), <=1e-5 vs the
+    # f64 oracle.
+    jobs, horizon = _setup(n=13, seed=3)
+    grid = selfowned_policies()[:7]
+    markets = make_scenarios(horizon, 13, seed=1)
+    mesh = GridMesh.create(*shape)
+    for early in (True, False):
+        ref = evaluate_grid(jobs, grid, markets, 300, backend="jax",
+                            early_start=early).unit_cost
+        orc = evaluate_grid(jobs, grid, markets, 300, backend="numpy",
+                            early_start=early).unit_cost
+        got = evaluate_grid(jobs, grid, markets, 300, backend="jax",
+                            early_start=early, mesh=mesh).unit_cost
+        assert np.array_equal(ref, got)
+        assert np.abs(got - orc).max() < 1e-5
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8, reason="needs 8 devices")
+@pytest.mark.parametrize("shape", [(4, 2), (2, 4)])
+def test_2d_mesh_refinement_rounds(shape):
+    # run_tola_scenarios keeps mesh= through the refinement rounds: the
+    # per-scenario availability pass shards over both axes and matches
+    # the unsharded run bitwise.
+    from repro.core import run_tola_scenarios
+
+    jobs, horizon = _setup(n=13, seed=3)
+    markets = make_scenarios(horizon, 5, seed=1)
+    ref = run_tola_scenarios(jobs, GRID, markets, r_total=6, seed=0,
+                             pool_iters=2, backend="jax")
+    got = run_tola_scenarios(jobs, GRID, markets, r_total=6, seed=0,
+                             pool_iters=2, backend="jax",
+                             mesh=GridMesh.create(*shape))
+    for a, b in zip(ref, got):
+        assert np.array_equal(a.cost_matrix, b.cost_matrix)
+        assert np.array_equal(a.chosen, b.chosen)
+
+
+# --------------------------------------------------------------------------
 # Real multi-device sharding: 8 forced host devices in a subprocess
 # --------------------------------------------------------------------------
 
@@ -342,7 +522,9 @@ import json
 import numpy as np
 import jax
 from repro.core import generate_chain_jobs, selfowned_policies
-from repro.engine import ScenarioMesh, ScenarioSpec, evaluate_grid
+from repro.core import run_tola_scenarios
+from repro.engine import GridMesh, ScenarioMesh, ScenarioSpec, evaluate_grid
+from repro.engine import make_scenarios
 from repro.learn import replay_stream
 
 assert len(jax.devices()) == 8
@@ -379,6 +561,33 @@ out["fold_regret_diff"] = float(
     np.abs(ref.regret_per_job() - sh.regret_per_job()).max())
 out["fold_curve_diff"] = float(
     np.abs(ref.confidence_bands()[0] - sh.confidence_bands()[0]).max())
+
+# 2-D meshes (4x2, 2x4): S=13 % 4 != 0 AND 7 policies force group padding;
+# refinement rounds (per-scenario availability) stay sharded throughout
+grid7 = selfowned_policies()[:7]
+markets = make_scenarios(horizon, 13, seed=1)
+orc = evaluate_grid(jobs, grid7, markets, 300, backend="numpy").unit_cost
+un = evaluate_grid(jobs, grid7, markets, 300, backend="jax").unit_cost
+m5 = make_scenarios(horizon, 5, seed=2)
+ref_tola = run_tola_scenarios(jobs, grid, m5, r_total=6, seed=0,
+                              pool_iters=2, backend="jax")
+grid2d = {}
+for shape in ((4, 2), (2, 4)):
+    gmesh = GridMesh.create(*shape)
+    sh2 = evaluate_grid(jobs, grid7, markets, 300, backend="jax",
+                        mesh=gmesh).unit_cost
+    got_tola = run_tola_scenarios(jobs, grid, m5, r_total=6, seed=0,
+                                  pool_iters=2, backend="jax", mesh=gmesh)
+    grid2d["%dx%d" % shape] = {
+        "shards": [gmesh.data_shards, gmesh.model_shards],
+        "oracle_diff": float(np.abs(sh2 - orc).max()),
+        "bitwise_vs_unsharded": bool(np.array_equal(sh2, un)),
+        "refine_bitwise": bool(all(
+            np.array_equal(a.cost_matrix, b.cost_matrix)
+            and np.array_equal(a.chosen, b.chosen)
+            for a, b in zip(ref_tola, got_tola))),
+    }
+out["grid2d"] = grid2d
 print(json.dumps(out))
 """
 
@@ -399,3 +608,9 @@ def test_sharded_8_devices_subprocess():
     assert res["fold_n"] == [13, 13]
     assert res["fold_regret_diff"] < 1e-4
     assert res["fold_curve_diff"] < 1e-4
+    assert set(res["grid2d"]) == {"4x2", "2x4"}
+    for shape, r in res["grid2d"].items():
+        assert r["shards"] == [int(x) for x in shape.split("x")], shape
+        assert r["oracle_diff"] < 1e-5, (shape, r)
+        assert r["bitwise_vs_unsharded"], shape
+        assert r["refine_bitwise"], shape

@@ -1,0 +1,80 @@
+"""Property tests (hypothesis) for the 2-D mesh padding contract
+(DESIGN.md §9): edge-repeat padding/splice invariants under
+``S % data_shards != 0`` AND ``n_groups % model_shards != 0``
+simultaneously — padded-lane results never leak into spliced tensors,
+``reduce="mean"`` weights by true counts. Pure-host arithmetic over the
+same ``pad_to``/``edge_repeat`` helpers the backends use, so the
+invariants hold on any device count (real multi-device coverage lives in
+tests/test_shard.py).
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.engine.mesh import edge_repeat, pad_to  # noqa: E402
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 23), st.integers(1, 8), st.integers(1, 11),
+       st.integers(1, 5), st.integers(1, 4), st.data())
+def test_padding_splice_never_leaks(S, d, G, m, J, data):
+    # The draw space covers BOTH nondivisibilities simultaneously
+    # (S % d != 0 and G % m != 0 — the interesting lanes) as well as the
+    # divisible cases, where padding must be the identity.
+    Sp, Gp = pad_to(S, d), pad_to(G, m)
+    vals = data.draw(st.lists(
+        st.floats(-1e3, 1e3, allow_nan=False, width=32),
+        min_size=S * G * J, max_size=S * G * J))
+    X = np.asarray(vals, np.float64).reshape(S, G * J)
+
+    # pad groups (whole J-row blocks, LAST group repeated), then scenarios
+    # (LAST row repeated) — the exact order backend_jax applies them
+    Xg = X.reshape(S, G, J)
+    Xg = np.concatenate([Xg] + [Xg[:, -1:]] * (Gp - G), axis=1)
+    Xp = edge_repeat(Xg.reshape(S, Gp * J), Sp)
+    assert Xp.shape == (Sp, Gp * J)
+    if S % d == 0:
+        assert Xp.shape[0] == S            # divisible: no scenario padding
+    if G % m == 0:
+        assert Xg.shape[1] == G            # divisible: no group padding
+
+    # "evaluate" elementwise per (scenario, group-row) lane — stand-in for
+    # the cost kernel, which never mixes lanes — then splice exactly the
+    # way the backend does: [:S] drops scenario padding, [:, :G] drops
+    # group padding.
+    res = 3.0 * Xp + 1.0
+    spliced = res[:S].reshape(S, Gp, J)[:, :G]
+
+    direct = 3.0 * X.reshape(S, G, J) + 1.0
+    # padded-lane results never leak into the spliced tensor
+    assert np.array_equal(spliced, direct)
+    # reduce="mean" runs over the SPLICED tensor, so it weights by the
+    # TRUE scenario count S (not Sp) and true group count G (not Gp) —
+    # duplicated lanes cannot bias the mean
+    assert np.allclose(spliced.mean(axis=0), direct.mean(axis=0))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 200), st.integers(1, 16))
+def test_pad_to_properties(k, n):
+    kp = pad_to(k, n)
+    assert kp % n == 0
+    assert kp >= k
+    assert kp - k < n              # minimal padding
+    assert pad_to(kp, n) == kp     # idempotent
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 12), st.integers(0, 10), st.integers(1, 4))
+def test_edge_repeat_properties(k, extra, cols):
+    a = np.arange(float(k * cols)).reshape(k, cols)
+    p = edge_repeat(a, k + extra)
+    assert p.shape == (k + extra, cols)
+    assert np.array_equal(p[:k], a)              # real rows untouched
+    assert np.array_equal(p[k:], np.repeat(a[-1:], extra, axis=0))
+    with pytest.raises(ValueError):
+        edge_repeat(a, k - 1)      # padding down is always an error
